@@ -1,0 +1,78 @@
+"""Fleet-scale scheduling benchmark: scoring throughput of the three
+implementations of the paper's inner loop (numpy reference, vectorized JAX,
+fused Pallas kernel), plus criterion quality at fleet scale.
+
+Emits CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fairness
+from repro.kernels.psdsf_score.ops import psdsf_argmin
+from repro.kernels.psdsf_score.ref import psdsf_argmin_ref
+
+
+def _time(fn, n=5):
+    fn()  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(print_csv: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    for N, J in [(256, 256), (1024, 1024), (4096, 4096)]:
+        R = 4
+        x = rng.uniform(0, 20, N)
+        d = rng.uniform(0.5, 5, (N, R))
+        res = rng.uniform(0, 8, (J, R))
+        phi = np.ones(N)
+
+        def np_ref():
+            K = fairness.psdsf_scores(
+                np.zeros((N, 1)) + x[:, None] / 1, d, res, phi,
+                residual=False, lookahead=False,
+            )
+            feas = (d[:, None, :] <= res[None, :, :]).all(-1)
+            s = np.where(feas, K, np.inf)
+            return np.unravel_index(np.argmin(s), s.shape)
+
+        xj, dj, rj, pj = map(jnp.asarray, (x, d, res, phi))
+
+        @jax.jit
+        def jax_ref(xj=xj, dj=dj, rj=rj, pj=pj):
+            return psdsf_argmin_ref(xj, pj, dj, rj)
+
+        def jax_fn():
+            return jax.block_until_ready(jax_ref())
+
+        def pallas_fn():
+            return jax.block_until_ready(
+                psdsf_argmin(xj, pj, dj, rj, interpret=True)
+            )
+
+        t_np = _time(np_ref)
+        t_jax = _time(jax_fn)
+        rows.append((f"psdsf_score_numpy_N{N}xJ{J}", t_np, "argmin"))
+        rows.append((f"psdsf_score_jax_N{N}xJ{J}", t_jax, "argmin"))
+        if N <= 1024:  # interpret-mode pallas is slow; just prove parity
+            t_pl = _time(pallas_fn, n=1)
+            rows.append((f"psdsf_score_pallas_interp_N{N}xJ{J}", t_pl,
+                         "argmin (CPU interpret; compiled on TPU)"))
+
+    if print_csv:
+        print("name,us_per_call,derived")
+        for name, t, d in rows:
+            print(f"{name},{t:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

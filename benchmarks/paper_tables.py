@@ -1,0 +1,76 @@
+"""Reproduces the paper's Tables 1-4 (Section 2 illustrative example).
+
+Emits CSV rows: table,scheduler,cell,value,paper_value
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.filling import PAPER_SCHEDULERS, progressive_fill, run_trials
+from repro.core.instance import paper_example
+
+N_TRIALS = 200
+
+# Paper values: Table 1 (allocations x_{n,i}), Table 2 (std of x under RRR),
+# Table 3 (unused capacities), Table 4 (std of unused under RRR).
+PAPER_T1 = {
+    "DRF": [6.55, 4.69, 4.69, 6.55],
+    "TSF": [6.5, 4.7, 4.7, 6.5],
+    "RRR-PS-DSF": [19.44, 1.15, 1.07, 19.42],
+    "BF-DRF": [20, 2, 0, 19],
+    "PS-DSF": [19, 0, 2, 20],
+    "rPS-DSF": [19, 2, 2, 19],
+}
+PAPER_T2 = {
+    "DRF": [2.31, 0.46, 0.46, 2.31],
+    "TSF": [2.29, 0.46, 0.46, 2.29],
+    "RRR-PS-DSF": [0.59, 0.99, 1.0, 0.49],
+}
+PAPER_T3 = {
+    "DRF": [62.56, 0, 0, 62.56],
+    "TSF": [62.8, 0, 0, 62.8],
+    "RRR-PS-DSF": [1.8, 4.6, 4.86, 1.92],
+    "BF-DRF": [0, 10, 1, 3],
+    "PS-DSF": [3, 1, 10, 0],
+    "rPS-DSF": [3, 1, 1, 3],
+}
+
+STOCHASTIC = ("DRF", "TSF", "RRR-PS-DSF")
+DETERMINISTIC = ("BF-DRF", "PS-DSF", "rPS-DSF")
+
+
+def run(print_csv: bool = True):
+    inst = paper_example()
+    rows = []
+
+    def emit(table, sched, cells, paper):
+        for i, (v, p) in enumerate(zip(np.ravel(cells), np.ravel(paper))):
+            rows.append((table, sched, i, float(v), float(p)))
+
+    for name in STOCHASTIC:
+        x = run_trials(inst, PAPER_SCHEDULERS[name], N_TRIALS, seed=1)
+        res = np.array([inst.residual(xi) for xi in x])
+        emit("T1_alloc_mean", name, x.mean(0), PAPER_T1[name])
+        emit("T2_alloc_std", name, x.std(0, ddof=1), PAPER_T2[name])
+        emit("T3_unused_mean", name, res.mean(0), PAPER_T3[name])
+
+    for name in DETERMINISTIC:
+        r = progressive_fill(inst, PAPER_SCHEDULERS[name], seed=0)
+        emit("T1_alloc_mean", name, r.x, PAPER_T1[name])
+        emit("T3_unused_mean", name, r.residual, PAPER_T3[name])
+
+    if print_csv:
+        print("table,scheduler,cell,value,paper_value")
+        for t, s, i, v, p in rows:
+            print(f"{t},{s},{i},{v:.3f},{p:.3f}")
+        # headline: totals
+        print("# headline totals (paper: DRF 22.48, TSF 22.4, RRR-PS-DSF 41.08,"
+              " BF-DRF 41, PS-DSF 41, rPS-DSF 42)")
+        for name in PAPER_T1:
+            tot = sum(v for t, s, i, v, p in rows if t == "T1_alloc_mean" and s == name)
+            print(f"# total,{name},{tot:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,160 @@
+"""Roofline analysis from the dry-run artifacts (single-pod mesh).
+
+Per (arch x shape) cell:
+    compute term    = HLO_FLOPs_per_dev / peak_FLOP/s
+    memory term     = HLO_HBM_bytes_per_dev / HBM_bw
+    collective term = collective_bytes_per_dev / link_bw
+(the SPMD-partitioned HLO is already the per-device program, so no /chips)
+
+plus MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs, which catches remat/recompute and
+padding waste.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_ACTIVE_CACHE: dict = {}
+
+
+def active_params(arch: str) -> tuple:
+    """(total_params, active_params) — MoE-aware, from the templates."""
+    if arch in _ACTIVE_CACHE:
+        return _ACTIVE_CACHE[arch]
+    from repro.configs import get_config
+    from repro.models.common import get_family
+    from repro.nn.param import count_params, is_spec
+    import jax
+
+    cfg = get_config(arch)
+    fam = get_family(cfg)
+    tmpl = fam.template(cfg)
+    total = count_params(tmpl)
+    expert = 0
+    for p in jax.tree.leaves(tmpl, is_leaf=is_spec):
+        if "experts" in p.axes:
+            expert += p.size
+    active = total - expert
+    if cfg.n_experts:
+        active += expert * cfg.experts_per_token / cfg.n_experts
+    _ACTIVE_CACHE[arch] = (total, int(active))
+    return _ACTIVE_CACHE[arch]
+
+
+def _cache_bytes_per_dev(art: dict) -> float:
+    """Decode-cache bytes per device, from the family's cache shapes."""
+    from repro.configs import get_config
+    from repro.models.common import get_family
+    import jax
+
+    cfg = get_config(art["arch"])
+    fam = get_family(cfg)
+    shapes = jax.eval_shape(
+        lambda: fam.init_cache(cfg, art["global_batch"], art["seq_len"])
+    )
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
+    return total / art["n_devices"]
+
+
+def model_flops(art: dict) -> float:
+    """Global MODEL_FLOPS for the cell (useful-work convention)."""
+    total, active = active_params(art["arch"])
+    if art["kind"] == "train":
+        tokens = art["global_batch"] * art["seq_len"]
+        return 6.0 * active * tokens
+    if art["kind"] == "prefill":
+        tokens = art["global_batch"] * art["seq_len"]
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * art["global_batch"]
+
+
+def analyze_artifact(art: dict) -> dict:
+    n_dev = art["n_devices"]
+    t_compute = art["hlo_flops"] / PEAK_FLOPS
+    t_memory = art["hlo_hbm_bytes"] / HBM_BW
+    t_coll = art["total_collective_bytes"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(art)
+    mf_per_dev = mf / n_dev
+    ratio = mf_per_dev / art["hlo_flops"] if art["hlo_flops"] else 0.0
+    # Ideal step time = max(useful-compute time, unavoidable-memory time).
+    # Unavoidable memory: params touched once (bf16 stream) + decode caches
+    # streamed once; training also writes grads + reads opt state (~3x).
+    pbytes = art["param_bytes_per_device"]
+    mem_floor = pbytes * (3.0 if art["kind"] == "train" else 0.5)
+    if art["kind"] == "decode":
+        mem_floor += _cache_bytes_per_dev(art)
+    t_ideal = max(mf_per_dev / PEAK_FLOPS, mem_floor / HBM_BW)
+    bound = max(terms.values())
+    frac = t_ideal / bound if bound > 0 else 0.0
+    return {
+        "arch": art["arch"],
+        "shape": art["shape"],
+        "mesh": art["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "suggestion": _suggest(dominant, ratio, art),
+    }
+
+
+def _suggest(dominant: str, ratio: float, art: dict) -> str:
+    if dominant == "collective" :
+        return ("reduce all-gather/all-reduce volume: rebalance FSDP vs TP, "
+                "overlap collectives with the layer scan, or compress grads")
+    if dominant == "memory":
+        if art["kind"] in ("prefill", "decode"):
+            return ("cut activation/cache traffic: flash attention tiling, "
+                    "cache cross/enc KV once, split local vs global caches")
+        return ("lower remat traffic: switch policy full->dots, fuse "
+                "attention (Pallas flash), bigger microbatches")
+    if ratio < 0.5:
+        return ("compiled FLOPs >> model FLOPs: remove remat recompute, "
+                "replicated compute on idle mesh axes, or MoE capacity waste")
+    return "near compute bound: tune block shapes / MXU utilization"
+
+
+def run(print_csv: bool = True, dir: str = "artifacts/dryrun", mesh: str = "single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir, f"*__{mesh}.json"))):
+        art = json.load(open(f))
+        rows.append(analyze_artifact(art))
+    if print_csv:
+        print("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+              "useful_ratio,roofline_fraction")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.4e},"
+                  f"{r['t_memory_s']:.4e},{r['t_collective_s']:.4e},"
+                  f"{r['dominant']},{r['useful_ratio']:.3f},"
+                  f"{r['roofline_fraction']:.3f}")
+        worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+        print("# five worst roofline fractions:")
+        for r in worst:
+            print(f"#   {r['arch']}/{r['shape']}: {r['roofline_fraction']:.3f} "
+                  f"({r['dominant']}-bound) -> {r['suggestion']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    run(dir=args.dir, mesh=args.mesh)

@@ -1,0 +1,48 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+roofline report.  Prints CSV blocks; see EXPERIMENTS.md for interpretation.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _section(title):
+    print(f"\n{'='*72}\n== {title}\n{'='*72}")
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+    _section("Tables 1-4: progressive-filling illustrative example")
+    from benchmarks import paper_tables
+    paper_tables.run()
+
+    _section("Figures 3-8: online Spark-on-Mesos experiment matrix")
+    from benchmarks import paper_figures
+    paper_figures.run()
+
+    _section("Figure 9: BF-DRF lock-in vs rPS-DSF adaptation")
+    from benchmarks import fig9_adaptation
+    fig9_adaptation.run()
+
+    _section("Fleet-scale scheduler scoring (numpy / jax / pallas)")
+    from benchmarks import cluster_bench
+    cluster_bench.run()
+
+    from benchmarks import roofline
+    if os.path.isdir("artifacts/dryrun_baseline"):
+        _section("Roofline (paper-faithful BASELINE, single-pod)")
+        roofline.run(dir="artifacts/dryrun_baseline")
+    if os.path.isdir("artifacts/dryrun"):
+        _section("Roofline (OPTIMIZED, single-pod)")
+        roofline.run(dir="artifacts/dryrun")
+    if not (os.path.isdir("artifacts/dryrun") or os.path.isdir("artifacts/dryrun_baseline")):
+        print("# no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# Root conftest: makes the repo root importable (tests import `benchmarks.*`).
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see the
+# real single-device CPU; only launch/dryrun.py forces 512 host devices.

@@ -1,0 +1,163 @@
+"""Checkpointing: sharded npz files, atomic manifests, keep-k retention,
+async writer, and elastic reshard-on-load.
+
+Layout:
+    <dir>/step_000123/
+        shard_00000.npz          one file per host (full replicas of its
+                                 addressable shard union; single-host = all)
+        manifest.json            tree structure + dtypes + step + extras
+    <dir>/LATEST                 atomic pointer (write tmp + rename)
+
+Restore rebuilds arrays with ANY target sharding (`reshard on load`): arrays
+are saved as full logical tensors, so an elastic restart onto a different
+mesh/device count just places them under the new NamedShardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _keypaths(tree):
+    return [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extras: Optional[dict] = None,
+             blocking: bool = True) -> str:
+        """Save a pytree of arrays.  blocking=False -> async background write
+        (the tree is snapshotted to host numpy first, so training can step)."""
+        leaves, _ = _flatten(tree)
+        names = _keypaths(tree)
+        host = [np.asarray(x) for x in leaves]   # device->host snapshot
+        dtypes = [str(a.dtype) for a in host]    # original dtypes (pre-view)
+        # numpy can't serialize extension dtypes (bfloat16 etc.): store raw
+        # bits; the manifest dtype restores the view on load.
+        host = [
+            a if a.dtype.kind in "biufc"
+            else a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+            for a in host
+        ]
+
+        if blocking:
+            return self._write(step, names, host, dtypes, extras or {})
+        self.wait()
+        self._pending = threading.Thread(
+            target=self._write, args=(step, names, host, dtypes, extras or {}),
+            daemon=True,
+        )
+        self._pending.start()
+        return self._step_dir(step)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def _write(self, step, names, host_arrays, dtypes, extras) -> str:
+        with self._lock:
+            d = self._step_dir(step)
+            tmp = d + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "shard_00000.npz"),
+                     **{f"a{i}": a for i, a in enumerate(host_arrays)})
+            manifest = {
+                "step": step,
+                "names": names,
+                "dtypes": dtypes,
+                "shapes": [list(a.shape) for a in host_arrays],
+                "extras": extras,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.rename(tmp, d)                      # atomic publish
+            self._write_latest(step)
+            self._gc()
+            return d
+
+    def _write_latest(self, step: int):
+        tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(tmp, "w") as f:
+            f.write(str(step))
+        os.replace(tmp, os.path.join(self.dir, "LATEST"))
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_") and not n.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, n, "manifest.json")):
+                    out.append(int(n[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if os.path.exists(p):
+            s = int(open(p).read().strip())
+            if os.path.exists(os.path.join(self._step_dir(s), "manifest.json")):
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple:
+        """-> (tree, extras). tree_like provides the structure; shardings (an
+        optional matching tree of NamedSharding) places each array — pass the
+        NEW mesh's shardings to do an elastic reshard-on-load."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        data = np.load(os.path.join(d, "shard_00000.npz"))
+        leaves = []
+        for i, dt in enumerate(manifest["dtypes"]):
+            a = data[f"a{i}"]
+            want = jax.numpy.dtype(dt)
+            if a.dtype != want:   # raw-bits view back to the extension dtype
+                a = a.view(want)
+            leaves.append(a)
+        _, treedef = _flatten(tree_like)
+        sh_leaves = (
+            jax.tree.leaves(shardings) if shardings is not None
+            else [None] * len(leaves)
+        )
+        placed = [
+            jax.device_put(a, s) if s is not None else jax.numpy.asarray(a)
+            for a, s in zip(leaves, sh_leaves)
+        ]
+        return jax.tree.unflatten(treedef, placed), manifest["extras"]

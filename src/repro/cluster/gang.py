@@ -1,0 +1,116 @@
+"""THE PAPER AS A FLEET FEATURE: fair gang-scheduling of training/serving
+jobs onto heterogeneous TPU pod slices.
+
+Mapping (see DESIGN.md §2):
+  framework n  -> job (one of the assigned archs x shape, or anything else)
+  server j     -> pod slice type (chips, HBM GB, host-RAM GB, ICI GB/s share)
+  task         -> gang unit: the smallest mesh slice the job can use
+  d_{n,r}      -> per-gang-unit demand derived from the job's DRY-RUN
+                  artifact (param+temp bytes/device, collective bytes/step)
+                  — i.e. the dry-run IS the paper's "workload characterization"
+
+The allocator is the paper's online allocator (repro.core.online); all its
+criteria (DRF/TSF/PS-DSF/rPS-DSF/BF-DRF) apply unchanged.  For fleets large
+enough that scoring matters (10k x 10k), `repro.kernels.psdsf_score` provides
+the fused Pallas scoring/argmin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.core.online import OnlineAllocator
+
+# resource vector: (chips, HBM GiB, host-RAM GiB, ICI GB/s share)
+RESOURCES = ("chips", "hbm_gib", "host_ram_gib", "ici_gbps")
+
+# v5e-flavored slice catalog (capacity per agent)
+SLICE_TYPES = {
+    "v5e-64-fat-host": (64.0, 1024.0, 2048.0, 1600.0),
+    "v5e-64": (64.0, 1024.0, 512.0, 1600.0),
+    "v5e-32-highici": (32.0, 512.0, 256.0, 1600.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    name: str
+    arch: str
+    shape: str
+    gang_units_wanted: int          # how many gang units the job can use
+    demand: tuple                   # per gang unit, aligned with RESOURCES
+    priority: float = 1.0           # phi weight (higher = larger fair share)
+    allowed_slice_types: tuple = () # placement constraints (empty = any)
+
+
+def demand_from_dryrun(artifact_path: str, gang_chips: int = 16) -> tuple:
+    """Workload characterization from the dry-run artifact (paper §3.1's
+    'characterized mode' — the demand vector comes from the compiled cell).
+    """
+    art = json.load(open(artifact_path))
+    per_dev = art["param_bytes_per_device"]
+    temp = (art.get("memory_analysis") or {}).get("temp_bytes", 0) or 0
+    hbm_gib = (per_dev + temp) * gang_chips / 2**30
+    # ICI demand: collective bytes per step / chips, expressed as GB/s at a
+    # nominal 1 step/s cadence (relative load is what the packer needs)
+    ici = art["total_collective_bytes"] / 1e9
+    host_ram = 2.0 * gang_chips  # host staging buffers, GiB
+    return (float(gang_chips), float(hbm_gib), float(host_ram), float(ici))
+
+
+class GangScheduler:
+    """Online fair gang scheduler over a dynamic slice fleet."""
+
+    def __init__(self, criterion: str = "rpsdsf", server_policy: str = "rrr",
+                 mode: str = "characterized", seed: int = 0):
+        self.alloc = OnlineAllocator(
+            n_resources=len(RESOURCES), criterion=criterion,
+            server_policy=server_policy, mode=mode, seed=seed,
+        )
+        self.jobs: dict[str, JobSpec] = {}
+        self.slice_types: dict[str, str] = {}
+        self.alloc.framework_demand_oracle = lambda fid: np.asarray(
+            self.jobs[fid].demand
+        )
+
+    # fleet membership ---------------------------------------------------------
+    def add_slice(self, name: str, slice_type: str):
+        self.alloc.add_agent(name, SLICE_TYPES[slice_type])
+        self.slice_types[name] = slice_type
+
+    def fail_slice(self, name: str) -> list:
+        """Returns [(job, gang_units_lost)] — feeds ElasticController."""
+        return self.alloc.remove_agent(name)
+
+    # job lifecycle ------------------------------------------------------------
+    def submit(self, job: JobSpec):
+        self.jobs[job.name] = job
+        allowed = None
+        if job.allowed_slice_types:
+            allowed = [a for a, t in self.slice_types.items()
+                       if t in job.allowed_slice_types]
+        self.alloc.register(job.name, demand=job.demand,
+                            wanted_tasks=job.gang_units_wanted,
+                            phi=job.priority, allowed_agents=allowed)
+
+    def finish(self, name: str):
+        self.alloc.deregister(name)
+        del self.jobs[name]
+
+    def schedule(self) -> list:
+        """Run one allocation epoch -> [(job, slice, gang_units)]."""
+        return [
+            (g.fid, g.agent, g.n_executors) for g in self.alloc.allocate()
+        ]
+
+    def placement(self, name: str) -> dict:
+        fw = self.alloc.frameworks[name]
+        return {a: len(b) for a, b in fw.tasks.items() if b}
+
+    def utilization(self) -> dict:
+        u = self.alloc.utilization()
+        return dict(zip(RESOURCES, (float(x) for x in u)))

@@ -1,0 +1,180 @@
+"""Progressive filling — vectorized JAX engine.
+
+The reference engine (:mod:`repro.core.filling`) is numpy and exact; this one
+is jit-compiled, runs entirely under ``jax.lax`` control flow, and vmaps over
+trials (for the Monte-Carlo RRR studies) or over *scheduling epochs* in the
+fleet-scale cluster layer, where N (jobs) x J (pod slices) is large enough
+that scoring is a real compute kernel (see ``repro.kernels.psdsf_score`` for
+the fused Pallas version of the inner score/argmin).
+
+Semantics match the reference engine:
+  * one task granted per step;
+  * RRR: servers visited in a per-round random permutation; the visited server
+    grants to the feasible framework with the lowest criterion score;
+  * pooled: all feasible (n, j) pairs compete (argmin over K for PS-DSF
+    family; argmin over frameworks then low-index server for global criteria);
+  * bestfit: framework first (global criterion), then best-fit server.
+
+Tie-breaking: "low" (lexicographic argmin — matches numpy reference) or
+"random" (uniform over the argmin set, via noise on a masked score).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+CRIT_DRF, CRIT_TSF, CRIT_PSDSF, CRIT_RPSDSF = 0, 1, 2, 3
+POL_RRR, POL_POOLED, POL_BESTFIT = 0, 1, 2
+_CRIT = {"drf": CRIT_DRF, "tsf": CRIT_TSF, "psdsf": CRIT_PSDSF, "rpsdsf": CRIT_RPSDSF}
+_POL = {"rrr": POL_RRR, "pooled": POL_POOLED, "bestfit": POL_BESTFIT}
+_BIG = jnp.float32(1e18)
+
+
+class FillState(NamedTuple):
+    x: jax.Array        # (N, J) int32 allocation
+    key: jax.Array      # PRNG key
+    perm: jax.Array     # (J,) int32 current round permutation (RRR)
+    pos: jax.Array      # () int32 position within the round
+    steps: jax.Array    # () int32
+
+
+def _residual(x, D, C):
+    used = jnp.einsum("nj,nr->jr", x.astype(jnp.float32), D)
+    return C - used
+
+
+def _feasible(x, D, C):
+    res = _residual(x, D, C)
+    return jnp.all(D[:, None, :] <= res[None, :, :] + 1e-6, axis=-1)  # (N, J)
+
+
+def _scores(crit: int, x, D, C, phi, lookahead: bool):
+    """(N, J) scores (global criteria are broadcast along J)."""
+    xt = jnp.sum(x, axis=1).astype(jnp.float32) + (1.0 if lookahead else 0.0)
+    if crit == CRIT_DRF:
+        dom = jnp.max(D / jnp.maximum(jnp.sum(C, axis=0)[None, :], 1e-30), axis=1)
+        s = xt * dom / phi
+        return jnp.broadcast_to(s[:, None], (D.shape[0], C.shape[0]))
+    if crit == CRIT_TSF:
+        ratio = C[None, :, :] / jnp.maximum(D[:, None, :], 1e-30)
+        monopoly = jnp.sum(jnp.min(ratio, axis=2), axis=1)
+        s = xt / (phi * jnp.maximum(monopoly, 1e-30))
+        return jnp.broadcast_to(s[:, None], (D.shape[0], C.shape[0]))
+    # PS-DSF / rPS-DSF
+    cap = _residual(x, D, C) if crit == CRIT_RPSDSF else C
+    safe = jnp.where(cap > 1e-12, cap, 1e-30)[None, :, :]
+    frac = D[:, None, :] / safe
+    frac = jnp.where((cap[None, :, :] <= 1e-12) & (D[:, None, :] > 0), _BIG, frac)
+    dom = jnp.max(frac, axis=2)
+    return (xt / phi)[:, None] * dom
+
+
+def _bestfit(res, d):
+    """(J,) cosine best-fit score (lower = better aligned)."""
+    num = jnp.sum(res * d[None, :], axis=1)
+    den = jnp.sqrt(jnp.sum(res * res, axis=1) * jnp.sum(d * d)) + 1e-30
+    return 1.0 - num / den
+
+
+def _masked_argmin(scores, mask, key, random_tie: bool):
+    """argmin over mask=True entries; random uniform over the argmin set."""
+    s = jnp.where(mask, scores, jnp.inf)
+    if random_tie:
+        m = jnp.min(s)
+        at_min = jnp.isclose(s, m, rtol=0.0, atol=1e-9) & mask
+        noise = jax.random.uniform(key, s.shape)
+        return jnp.argmax(at_min * (1.0 + noise))  # max noise among minima
+    return jnp.argmin(s)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("criterion", "policy", "lookahead", "tie", "max_steps")
+)
+def progressive_fill_jax(
+    D: jax.Array,            # (N, R) demands
+    C: jax.Array,            # (J, R) capacities
+    phi: jax.Array,          # (N,) weights
+    key: jax.Array,
+    *,
+    criterion: str = "drf",
+    policy: str = "rrr",
+    lookahead: bool = False,
+    tie: str = "low",
+    max_steps: int = 4096,
+    x0: jax.Array | None = None,
+) -> jax.Array:
+    """Run progressive filling; returns the (N, J) int32 allocation."""
+    crit, pol = _CRIT[criterion], _POL[policy]
+    random_tie = tie == "random"
+    N, J = D.shape[0], C.shape[0]
+    D = D.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    phi = phi.astype(jnp.float32)
+
+    x_init = jnp.zeros((N, J), jnp.int32) if x0 is None else x0.astype(jnp.int32)
+    key, pk = jax.random.split(key)
+    state = FillState(
+        x=x_init,
+        key=key,
+        perm=jax.random.permutation(pk, J),
+        pos=jnp.int32(0),
+        steps=jnp.int32(0),
+    )
+
+    def cond(st: FillState):
+        return jnp.any(_feasible(st.x, D, C)) & (st.steps < max_steps)
+
+    def body(st: FillState):
+        feas = _feasible(st.x, D, C)
+        sc = _scores(crit, st.x, D, C, phi, lookahead)
+        key, k1, k2, k3 = jax.random.split(st.key, 4)
+
+        if pol == POL_RRR:
+            # rank of each server within the current round
+            rank = jnp.zeros(J, jnp.int32).at[st.perm].set(jnp.arange(J, dtype=jnp.int32))
+            server_ok = jnp.any(feas, axis=0)  # (J,)
+            ahead = server_ok & (rank >= st.pos)
+            # prefer servers later in this round; else wrap to a fresh permutation
+            use_wrap = ~jnp.any(ahead)
+            new_perm = jax.random.permutation(k1, J)
+            new_rank = jnp.zeros(J, jnp.int32).at[new_perm].set(jnp.arange(J, dtype=jnp.int32))
+            eff_rank = jnp.where(use_wrap, new_rank, rank)
+            eff_mask = jnp.where(use_wrap, server_ok, ahead)
+            j = _masked_argmin(eff_rank.astype(jnp.float32), eff_mask, k2, False)
+            n = _masked_argmin(sc[:, j], feas[:, j], k3, random_tie)
+            pos = eff_rank[j] + 1
+            pos = jnp.where(pos >= J, 0, pos)
+            # if we wrapped past the end, next round needs a fresh perm too;
+            # approximate by re-permuting whenever pos returns to 0
+            perm = jnp.where(use_wrap, new_perm, st.perm)
+            perm = jnp.where(pos == 0, jax.random.permutation(k1, J), perm)
+            return FillState(st.x.at[n, j].add(1), key, perm, pos, st.steps + 1)
+
+        if pol == POL_POOLED:
+            if crit in (CRIT_PSDSF, CRIT_RPSDSF):
+                flat = _masked_argmin(sc.ravel(), feas.ravel(), k2, random_tie)
+                n, j = flat // J, flat % J
+            else:
+                n = _masked_argmin(sc[:, 0], jnp.any(feas, axis=1), k2, random_tie)
+                j = _masked_argmin(jnp.arange(J, dtype=jnp.float32), feas[n], k3, False)
+            return FillState(st.x.at[n, j].add(1), key, st.perm, st.pos, st.steps + 1)
+
+        # POL_BESTFIT
+        per_fw = jnp.min(jnp.where(feas, sc, jnp.inf), axis=1)
+        n = _masked_argmin(per_fw, jnp.any(feas, axis=1), k2, random_tie)
+        res = _residual(st.x, D, C)
+        bf = _bestfit(res, D[n])
+        j = _masked_argmin(bf, feas[n], k3, False)
+        return FillState(st.x.at[n, j].add(1), key, st.perm, st.pos, st.steps + 1)
+
+    final = jax.lax.while_loop(cond, body, state)
+    return final.x
+
+
+def fill_trials_jax(D, C, phi, keys, **kw):
+    """vmap progressive filling over a batch of PRNG keys -> (T, N, J)."""
+    fn = functools.partial(progressive_fill_jax, D, C, phi, **kw)
+    return jax.vmap(fn)(keys)

@@ -1,0 +1,306 @@
+"""Online (Mesos-style) fair allocator.
+
+Implements the paper's Section 3 allocator semantics on top of the fairness
+criteria of :mod:`repro.core.fairness`:
+
+  * **workload-characterized ("fine-grained")** — each framework declares its
+    per-task demand vector d_n; every allocation epoch hands out single-task
+    bundles, choosing the framework by the configured criterion and the agent
+    by the configured server policy (RRR / pooled / best-fit).
+  * **oblivious ("coarse-grained")** — demands are NOT declared; the allocator
+    scores frameworks on *inferred* demands (aggregate usage / #grants) and
+    offers the visited agent's ENTIRE free resources; the framework carves as
+    many executors as fit (capped by what it still wants) and returns the rest.
+
+Shared semantics (paper §3.1):
+  * newly-arrived frameworks (zero allocation) are naturally prioritized: all
+    criteria score them 0;
+  * on release (job completion / agent failure) the freed resources re-enter
+    the pool and a new epoch runs;
+  * agents can register/deregister dynamically (the paper's §3.7 one-by-one
+    registration; our fault-tolerance churn).
+
+This module is deliberately backend-agnostic pure Python/numpy — it is the
+*control plane*. The fleet-scale data plane (thousands of jobs x slices) uses
+:mod:`repro.core.filling_jax` / the ``psdsf_score`` Pallas kernel for the
+scoring inner loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import fairness
+
+
+@dataclasses.dataclass
+class FrameworkState:
+    fid: str
+    demand: Optional[np.ndarray]        # declared per-task demand (characterized)
+    wanted_tasks: int                   # executors the framework still wants
+    usage: np.ndarray                   # (R,) aggregate allocated resources
+    tasks: dict                         # agent -> list[np.ndarray] bundles
+    slack: dict = dataclasses.field(default_factory=dict)  # agent -> (R,) held-but-unused (coarse offers)
+    grants: int = 0                     # number of accepted offers
+    phi: float = 1.0                    # priority weight
+    allowed_agents: Optional[set] = None  # placement constraints (None = any)
+
+    @property
+    def n_tasks(self) -> int:
+        return sum(len(v) for v in self.tasks.values())
+
+    def inferred_demand(self) -> Optional[np.ndarray]:
+        if self.demand is not None:
+            return self.demand
+        n = self.n_tasks
+        return None if n == 0 else self.usage / n
+
+
+@dataclasses.dataclass
+class Grant:
+    fid: str
+    agent: str
+    bundle: np.ndarray          # resources handed over
+    n_executors: int            # executors the framework carved out of it
+
+
+class OnlineAllocator:
+    """Offer-based fair allocator over a dynamic pool of agents."""
+
+    def __init__(
+        self,
+        n_resources: int,
+        criterion: str = "drf",
+        server_policy: str = "rrr",
+        mode: str = "characterized",     # characterized | oblivious
+        bf_metric: str = "cosine",
+        seed: int = 0,
+    ):
+        if mode not in ("characterized", "oblivious"):
+            raise ValueError(mode)
+        self.R = n_resources
+        self.criterion = criterion
+        self.server_policy = server_policy
+        self.mode = mode
+        self.bf_metric = bf_metric
+        self.rng = np.random.default_rng(seed)
+        self.agents: dict[str, np.ndarray] = {}        # agent -> capacity (R,)
+        self.free: dict[str, np.ndarray] = {}          # agent -> free (R,)
+        self.frameworks: dict[str, FrameworkState] = {}
+
+    # -- membership ---------------------------------------------------------
+
+    def add_agent(self, name: str, capacity) -> None:
+        cap = np.asarray(capacity, np.float64)
+        self.agents[name] = cap
+        self.free[name] = cap.copy()
+
+    def remove_agent(self, name: str) -> list[tuple[str, int]]:
+        """Remove an agent (failure). Returns [(fid, n_executors_lost)]."""
+        lost = []
+        for fw in self.frameworks.values():
+            bundles = fw.tasks.pop(name, [])
+            s = fw.slack.pop(name, None)
+            if s is not None:
+                fw.usage -= s
+            if bundles:
+                fw.usage -= np.sum(bundles, axis=0)
+                lost.append((fw.fid, len(bundles)))
+        self.agents.pop(name)
+        self.free.pop(name)
+        return lost
+
+    def register(self, fid: str, demand=None, wanted_tasks: int = 1,
+                 phi: float = 1.0, allowed_agents=None) -> None:
+        d = None if demand is None else np.asarray(demand, np.float64)
+        if self.mode == "oblivious":
+            d = None  # the allocator is not told, even if the job knows
+        self.frameworks[fid] = FrameworkState(
+            fid=fid, demand=d, wanted_tasks=wanted_tasks,
+            usage=np.zeros(self.R), tasks={}, phi=float(phi),
+            allowed_agents=None if allowed_agents is None else set(allowed_agents),
+        )
+
+    def deregister(self, fid: str) -> None:
+        fw = self.frameworks.pop(fid)
+        for agent, bundles in fw.tasks.items():
+            if agent in self.free:
+                self.free[agent] += np.sum(bundles, axis=0)
+        for agent, s in fw.slack.items():
+            if agent in self.free:
+                self.free[agent] += s
+
+    def release_executor(self, fid: str, agent: str) -> None:
+        fw = self.frameworks[fid]
+        bundle = fw.tasks[agent].pop()
+        fw.usage -= bundle
+        if agent in self.free:
+            self.free[agent] += bundle
+
+    def set_wanted(self, fid: str, wanted_tasks: int) -> None:
+        self.frameworks[fid].wanted_tasks = wanted_tasks
+
+    def force_place(self, fid: str, agent: str, n_executors: int = 1) -> None:
+        """Place executors bypassing the criterion (constructing an initial
+        state, e.g. the paper's §3.7 suboptimal allocation)."""
+        fw = self.frameworks[fid]
+        d = self._true_demand(fid)
+        bundle = d * n_executors
+        if (self.free[agent] - bundle < -1e-9).any():
+            raise ValueError(f"agent {agent} cannot hold {n_executors} executors of {fid}")
+        self.free[agent] = self.free[agent] - bundle
+        fw.tasks.setdefault(agent, []).extend([d.copy()] * n_executors)
+        fw.usage = fw.usage + bundle
+
+    # -- scoring ------------------------------------------------------------
+
+    def _matrices(self):
+        fids = sorted(self.frameworks)
+        ags = sorted(self.agents)
+        X = np.array(
+            [[len(self.frameworks[f].tasks.get(a, [])) for a in ags] for f in fids],
+            np.float64,
+        )
+        C = np.array([self.agents[a] for a in ags])
+        FREE = np.array([self.free[a] for a in ags])
+        D = np.zeros((len(fids), self.R))
+        for i, f in enumerate(fids):
+            d = self.frameworks[f].inferred_demand()
+            D[i] = d if d is not None else 0.0
+        phi = np.array([self.frameworks[f].phi for f in fids])
+        return fids, ags, X, D, C, FREE, phi
+
+    def _framework_scores(self, X, D, C, phi):
+        """(N, A) scores; oblivious DRF/TSF score on aggregate usage."""
+        name = self.criterion
+        if name in ("drf", "tsf"):
+            if self.mode == "oblivious":
+                fids = sorted(self.frameworks)
+                usage = np.array([self.frameworks[f].usage for f in fids])
+                ctot = np.maximum(C.sum(axis=0), 1e-30)
+                s = (usage / ctot).max(axis=1) / phi
+            else:
+                s = fairness.criterion_scores(name, X, D, C, phi, lookahead=False)
+            return np.broadcast_to(s[:, None], (len(s), C.shape[0]))
+        return fairness.criterion_scores(
+            name, X, D, C, phi, lookahead=False
+        )  # psdsf / rpsdsf -> (N, A)
+
+    # -- allocation epoch ----------------------------------------------------
+
+    def allocate(self, per_agent_limit: Optional[int] = None) -> list[Grant]:
+        """Run one allocation epoch; returns grants.
+
+        per_agent_limit models Mesos's offer cycle: each agent's resources are
+        offered at most that many times per cycle (1 = one offer per agent per
+        cycle, the Mesos default behaviour). None = fill to saturation (the
+        progressive-filling idealization of Section 2).
+        """
+        grants: list[Grant] = []
+        used: dict[str, int] = {}
+        guard = 0
+        while True:
+            guard += 1
+            if guard > 100_000:
+                raise RuntimeError("allocation epoch did not converge")
+            blocked = (
+                {a for a, k in used.items() if k >= per_agent_limit}
+                if per_agent_limit is not None else set()
+            )
+            g = self._allocate_one(blocked)
+            if g is None:
+                return grants
+            used[g.agent] = used.get(g.agent, 0) + 1
+            grants.append(g)
+
+    # the paper's executor demands are known to the *framework* even in
+    # oblivious mode (Spark needs them to size executors); the allocator
+    # learns them only through accepted offers.
+    framework_demand_oracle: Optional[Callable[[str], np.ndarray]] = None
+
+    def _true_demand(self, fid: str) -> np.ndarray:
+        fw = self.frameworks[fid]
+        if fw.demand is not None:
+            return fw.demand
+        if self.framework_demand_oracle is None:
+            raise RuntimeError("oblivious mode needs framework_demand_oracle")
+        return np.asarray(self.framework_demand_oracle(fid), np.float64)
+
+    def _wants(self, fid: str) -> bool:
+        fw = self.frameworks[fid]
+        return fw.n_tasks < fw.wanted_tasks
+
+    def _feasible_mask(self, fids, ags, FREE, blocked=()):
+        """(N, A) one-more-executor feasibility using true demands."""
+        feas = np.zeros((len(fids), len(ags)), bool)
+        ok = np.array([a not in blocked for a in ags])
+        for i, f in enumerate(fids):
+            fw = self.frameworks[f]
+            if not self._wants(f):
+                continue
+            d = self._true_demand(f)
+            row = (d[None, :] <= FREE + 1e-9).all(axis=1) & ok
+            if fw.allowed_agents is not None:
+                row &= np.array([a in fw.allowed_agents for a in ags])
+            feas[i] = row
+        return feas
+
+    def _allocate_one(self, blocked=()) -> Optional[Grant]:
+        if not self.frameworks or not self.agents:
+            return None
+        fids, ags, X, D, C, FREE, phi = self._matrices()
+        feas = self._feasible_mask(fids, ags, FREE, blocked)
+        if not feas.any():
+            return None
+        scores = self._framework_scores(X, D, C, phi)
+
+        if self.server_policy == "pooled" and self.criterion in ("psdsf", "rpsdsf"):
+            s = np.where(feas, scores, np.inf)
+            n, a = np.unravel_index(np.argmin(s), s.shape)
+        elif self.server_policy == "bestfit":
+            per_fw = np.where(feas, scores, np.inf).min(axis=1)
+            n = int(np.argmin(per_fw))
+            bf = fairness.bestfit_scores(FREE, self._true_demand(fids[n]),
+                                         metric=self.bf_metric)
+            a = int(np.argmin(np.where(feas[n], bf, np.inf)))
+        else:  # rrr
+            order = self.rng.permutation(len(ags))
+            a = next((j for j in order if feas[:, j].any()), None)
+            if a is None:
+                return None
+            n = int(np.argmin(np.where(feas[:, a], scores[:, a], np.inf)))
+        fid, agent = fids[n], ags[a]
+        return self._grant(fid, agent)
+
+    def _grant(self, fid: str, agent: str) -> Grant:
+        fw = self.frameworks[fid]
+        d = self._true_demand(fid)
+        if self.mode == "characterized":
+            n_exec = 1
+            bundle = d.copy()
+        else:
+            # Coarse offer (paper §3.5.3): the framework is offered the
+            # agent's ENTIRE free vector and accepts all of it, carving out
+            # as many executors as fit; the remainder is HELD as slack until
+            # the framework deregisters ("leaving nothing available for
+            # others") — this is the oblivious-mode waste mechanism.
+            offer = self.free[agent].copy()
+            fit = int(np.floor((offer / np.maximum(d, 1e-30)).min()))
+            n_exec = max(1, min(fit, fw.wanted_tasks - fw.n_tasks))
+            bundle = offer
+            fw.slack[agent] = fw.slack.get(agent, np.zeros(self.R)) + (offer - d * n_exec)
+        self.free[agent] = self.free[agent] - bundle
+        fw.tasks.setdefault(agent, []).extend([d.copy()] * n_exec)
+        fw.usage = fw.usage + bundle
+        fw.grants += 1
+        return Grant(fid=fid, agent=agent, bundle=bundle, n_executors=n_exec)
+
+    # -- metrics -------------------------------------------------------------
+
+    def utilization(self) -> np.ndarray:
+        """(R,) fraction of total capacity currently allocated."""
+        cap = np.sum(list(self.agents.values()), axis=0)
+        free = np.sum(list(self.free.values()), axis=0)
+        return (cap - free) / np.maximum(cap, 1e-30)

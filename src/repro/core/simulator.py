@@ -1,0 +1,409 @@
+"""Discrete-event simulator of Spark workloads on a Mesos-style cluster.
+
+Models the paper's Section 3 experiments:
+  * two submission groups (Pi: CPU-bound, WordCount: memory-bound), each with
+    several job queues; every queue submits its jobs sequentially;
+  * each job (= Mesos framework) is divided into microtasks; executors are
+    Mesos tasks that *pull* microtasks from the driver (one at a time);
+  * stragglers: a small fraction of tasks run ~10x long; with speculative
+    execution the driver relaunches slow tasks near the job barrier and takes
+    the first finisher (paper §3.2);
+  * executors live until the job completes, then all resources are released
+    and the allocator runs a new epoch (churn);
+  * agents may register late (paper §3.7) or fail mid-run (fault injection).
+
+The allocator is :class:`repro.core.online.OnlineAllocator`, so every
+(criterion x server-policy x mode) combination from the paper is runnable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.core.online import OnlineAllocator
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    group: str
+    demand: tuple            # per-executor resources
+    n_tasks: int = 40        # mean microtasks per job (jittered per job)
+    mean_task_s: float = 8.0
+    max_executors: int = 12
+    size_jitter: float = 0.5  # n_tasks ~ U[(1-j)*n, (1+j)*n] — staggers churn
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    criterion: str = "drf"
+    server_policy: str = "rrr"
+    mode: str = "characterized"          # characterized | oblivious
+    bf_metric: str = "cosine"
+    jobs_per_queue: int = 10
+    n_queues_per_group: int = 5
+    straggler_prob: float = 0.05
+    straggler_factor: float = 10.0
+    speculation: bool = True
+    spec_multiplier: float = 1.8
+    spec_min_elapsed: float = 4.0
+    alloc_interval: float = 1.0          # Mesos periodic allocation cycle
+    submit_delay: float = 3.0            # Spark driver startup latency
+    release_jitter: float = 2.0          # executors release non-simultaneously
+    offers_per_agent: int = 1            # offers per agent per cycle (Mesos: 1)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    timeline: np.ndarray                 # (T, 1+2R): time, allocated[r]..., utilized[r]...
+    n_resources: int
+    job_durations: dict                  # group -> list[float]
+    tasks_speculated: int
+    tasks_requeued_on_failure: int
+
+    def _series(self, col: int):
+        return self.timeline[:, 0], self.timeline[:, col]
+
+    def _twmean(self, col: int) -> float:
+        t, u = self._series(col)
+        if len(t) < 2:
+            return 0.0
+        dt = np.diff(t)
+        return float(np.sum(u[:-1] * dt) / max(np.sum(dt), 1e-12))
+
+    def _twstd(self, col: int) -> float:
+        t, u = self._series(col)
+        if len(t) < 2:
+            return 0.0
+        dt = np.diff(t)
+        m = self._twmean(col)
+        return float(np.sqrt(np.sum((u[:-1] - m) ** 2 * dt) / max(np.sum(dt), 1e-12)))
+
+    # allocated = resources handed to frameworks (incl. coarse-offer slack);
+    # utilized  = demand of executors actually running a task right now.
+    def mean_util(self, r: int) -> float:
+        return self._twmean(1 + r)
+
+    def util_std(self, r: int) -> float:
+        return self._twstd(1 + r)
+
+    def mean_used(self, r: int) -> float:
+        return self._twmean(1 + self.n_resources + r)
+
+    def used_std(self, r: int) -> float:
+        return self._twstd(1 + self.n_resources + r)
+
+
+class _Job:
+    def __init__(self, jid, spec: JobSpec, rng: np.random.Generator, cfg: SimConfig):
+        self.jid = jid
+        self.spec = spec
+        lo = max(1, int(spec.n_tasks * (1 - spec.size_jitter)))
+        hi = max(lo + 1, int(spec.n_tasks * (1 + spec.size_jitter)))
+        self.n_tasks = int(rng.integers(lo, hi + 1))
+        self.unlaunched = list(range(self.n_tasks))
+        self.done: set = set()
+        self.running: dict = {}          # task_id -> {copy_id: (executor, t_start, t_end)}
+        self.executors: dict = {}        # eid -> agent
+        self.idle: list = []             # idle executor ids
+        self.submit_time: Optional[float] = None
+        self.durations = rng.lognormal(
+            mean=np.log(spec.mean_task_s), sigma=0.35, size=self.n_tasks
+        )
+        strag = rng.random(self.n_tasks) < cfg.straggler_prob
+        self.durations = np.where(strag, self.durations * cfg.straggler_factor, self.durations)
+        self.speculated: set = set()
+
+    @property
+    def complete(self) -> bool:
+        return len(self.done) == self.n_tasks
+
+    def wanted(self) -> int:
+        live = self.n_tasks - len(self.done)
+        return min(self.spec.max_executors, max(live, 0))
+
+
+class SparkMesosSim:
+    def __init__(self, agents, specs: dict, cfg: SimConfig,
+                 agent_schedule=None, failures=None):
+        """agents: [(name, capacity)]; specs: group -> JobSpec;
+        agent_schedule: optional [(time, name, capacity)] late registrations;
+        failures: optional [(time, name)] agent failures."""
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        R = len(next(iter(specs.values())).demand)
+        self.alloc = OnlineAllocator(
+            n_resources=R, criterion=cfg.criterion, server_policy=cfg.server_policy,
+            mode=cfg.mode, bf_metric=cfg.bf_metric, seed=cfg.seed,
+        )
+        self.alloc.framework_demand_oracle = self._demand_oracle
+        self.specs = specs
+        self.jobs: dict[str, _Job] = {}
+        self.queues: dict[str, list] = {}     # queue id -> remaining job count
+        self.active_job: dict[str, str] = {}  # queue id -> jid
+        self.events: list = []
+        self.seq = itertools.count()
+        self.now = 0.0
+        self.timeline: list = []
+        self.job_durations: dict = {g: [] for g in specs}
+        self.n_spec = 0
+        self.n_requeued = 0
+        self._eid = itertools.count()
+        self._alloc_pending = False
+
+        for name, cap in agents:
+            self.alloc.add_agent(name, cap)
+        for t, name, cap in (agent_schedule or []):
+            self._push(t, "agent_up", (name, cap))
+        for t, name in (failures or []):
+            self._push(t, "agent_down", name)
+
+        for g, spec in specs.items():
+            for q in range(cfg.n_queues_per_group):
+                qid = f"{g}-q{q}"
+                self.queues[qid] = [f"{qid}-j{i}" for i in range(cfg.jobs_per_queue)]
+
+    # ------------------------------------------------------------------ util
+
+    def _demand_oracle(self, fid):
+        return np.asarray(self.jobs[fid].spec.demand, np.float64)
+
+    def _push(self, t, kind, payload):
+        heapq.heappush(self.events, (t, next(self.seq), kind, payload))
+
+    def _record(self):
+        cap = np.sum(list(self.alloc.agents.values()), axis=0) if self.alloc.agents else None
+        if cap is None:
+            return
+        busy = np.zeros_like(cap)
+        for job in self.jobs.values():
+            n_busy = sum(len(c) for c in job.running.values())
+            busy += np.asarray(job.spec.demand) * min(n_busy, len(job.executors))
+        self.timeline.append(
+            (self.now, *self.alloc.utilization(), *(busy / np.maximum(cap, 1e-30)))
+        )
+
+    def _group_of(self, jid: str) -> str:
+        return jid.split("-q")[0]
+
+    # ------------------------------------------------------------ lifecycle
+
+    def _submit_next(self, qid: str):
+        if not self.queues[qid]:
+            self.active_job.pop(qid, None)
+            return
+        jid = self.queues[qid].pop(0)
+        g = self._group_of(jid)
+        job = _Job(jid, self.specs[g], self.rng, self.cfg)
+        job.submit_time = self.now
+        self.jobs[jid] = job
+        self.active_job[qid] = jid
+        self.alloc.register(jid, demand=job.spec.demand, wanted_tasks=job.wanted())
+
+    def _dispatch(self, job: _Job):
+        """Idle executors pull microtasks; near the barrier, speculate."""
+        while job.idle and job.unlaunched:
+            eid = job.idle.pop()
+            tid = job.unlaunched.pop(0)
+            self._launch(job, tid, eid)
+        if self.cfg.speculation and not job.unlaunched:
+            self._speculate(job)
+
+    def _launch(self, job: _Job, tid: int, eid: int, duration=None):
+        dur = float(job.durations[tid]) if duration is None else duration
+        t_end = self.now + dur
+        copy = len(job.running.get(tid, {}))
+        job.running.setdefault(tid, {})[copy] = (eid, self.now, t_end)
+        self._push(t_end, "task_done", (job.jid, tid, copy, eid))
+
+    def _speculate(self, job: _Job):
+        if not job.idle or not job.done:
+            return
+        med = float(np.median([job.durations[t] for t in job.done]))
+        for tid, copies in list(job.running.items()):
+            if tid in job.speculated or len(copies) > 1:
+                continue
+            (_, t0, _t_end) = next(iter(copies.values()))
+            elapsed = self.now - t0
+            if elapsed > self.cfg.spec_multiplier * med and elapsed > self.cfg.spec_min_elapsed:
+                if not job.idle:
+                    break
+                eid = job.idle.pop()
+                # relaunch draws a fresh (typically non-straggling) duration
+                dur = float(self.rng.lognormal(np.log(job.spec.mean_task_s), 0.35))
+                self._launch(job, tid, eid, duration=dur)
+                job.speculated.add(tid)
+                self.n_spec += 1
+
+    def _finish_job(self, job: _Job):
+        g = self._group_of(job.jid)
+        self.job_durations[g].append(self.now - job.submit_time)
+        del self.jobs[job.jid]
+        qid = next(q for q, j in self.active_job.items() if j == job.jid)
+        # executors release with jitter ("may not simultaneously release");
+        # the framework deregisters (freeing coarse-offer slack) last; the
+        # queue's next job submits after the driver-startup delay.
+        jmax = 0.0
+        for eid, agent in job.executors.items():
+            jt = float(self.rng.uniform(0.0, self.cfg.release_jitter))
+            jmax = max(jmax, jt)
+            self._push(self.now + jt, "release_exec", (job.jid, agent))
+        self._push(self.now + jmax + 1e-3, "deregister", job.jid)
+        self._push(self.now + self.cfg.submit_delay, "submit", qid)
+
+    def _wanted(self, job: _Job) -> int:
+        # Coarse-grained (oblivious) Spark holds max executors until job end;
+        # characterized drivers size their ask by remaining work.
+        if self.cfg.mode == "oblivious":
+            return job.spec.max_executors if not job.complete else 0
+        return job.wanted()
+
+    def _mark_dirty(self):
+        """Schedule an allocation epoch at the next Mesos allocation cycle."""
+        if not self._alloc_pending:
+            self._alloc_pending = True
+            self._push(self.now + self.cfg.alloc_interval, "alloc", None)
+
+    def _allocate_and_dispatch(self):
+        # dying frameworks (job gone, executors draining) want nothing
+        for fid in self.alloc.frameworks:
+            if fid not in self.jobs:
+                self.alloc.set_wanted(fid, 0)
+        for jid, job in self.jobs.items():
+            self.alloc.set_wanted(jid, self._wanted(job))
+        grants = self.alloc.allocate(per_agent_limit=self.cfg.offers_per_agent)
+        for g in grants:
+            job = self.jobs[g.fid]
+            for _ in range(g.n_executors):
+                eid = next(self._eid)
+                job.executors[eid] = g.agent
+                job.idle.append(eid)
+        for job in self.jobs.values():
+            self._dispatch(job)
+        if grants:
+            self._mark_dirty()  # keep cycling while offers land (ramp-up)
+        self._record()
+
+    # ---------------------------------------------------------------- events
+
+    def _on_task_done(self, jid, tid, copy, eid):
+        job = self.jobs.get(jid)
+        if job is None:
+            return
+        copies = job.running.get(tid)
+        if copies is None or copy not in copies or copies[copy][0] != eid:
+            return  # stale event (copy killed / executor lost)
+        if tid in job.done:
+            return
+        job.done.add(tid)
+        # free every executor that was running a copy of this task
+        for c, (e, _t0, _t1) in copies.items():
+            job.idle.append(e)
+        del job.running[tid]
+        if job.complete:
+            self._finish_job(job)
+            self._mark_dirty()
+        else:
+            self._dispatch(job)
+
+    def _on_agent_down(self, name):
+        if name not in self.alloc.agents:
+            return
+        lost = self.alloc.remove_agent(name)
+        for fid, _n in lost:
+            job = self.jobs.get(fid)
+            if job is None:
+                continue
+            dead = [e for e, a in job.executors.items() if a == name]
+            dead_set = set(dead)
+            for e in dead:
+                del job.executors[e]
+            job.idle = [e for e in job.idle if e not in dead_set]
+            # requeue tasks whose only running copies were on the dead agent
+            for tid, copies in list(job.running.items()):
+                live = {c: v for c, v in copies.items() if v[0] not in dead_set}
+                if live:
+                    job.running[tid] = live
+                else:
+                    del job.running[tid]
+                    job.unlaunched.insert(0, tid)
+                    self.n_requeued += 1
+        self._mark_dirty()
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, until: float = float("inf")) -> SimResult:
+        for qid in list(self.queues):
+            self._submit_next(qid)
+        self._allocate_and_dispatch()
+        while self.events and self.now <= until:
+            t, _s, kind, payload = heapq.heappop(self.events)
+            self.now = t
+            if kind == "task_done":
+                self._on_task_done(*payload)
+            elif kind == "alloc":
+                self._alloc_pending = False
+                self._allocate_and_dispatch()
+            elif kind == "submit":
+                self._submit_next(payload)
+                self._mark_dirty()
+            elif kind == "release_exec":
+                fid, agent = payload
+                fw = self.alloc.frameworks.get(fid)
+                if fw is not None and fw.tasks.get(agent):
+                    self.alloc.release_executor(fid, agent)
+                    self._record()
+                self._mark_dirty()
+            elif kind == "deregister":
+                if payload in self.alloc.frameworks:
+                    self.alloc.deregister(payload)
+                    self._record()
+                self._mark_dirty()
+            elif kind == "agent_up":
+                name, cap = payload
+                self.alloc.add_agent(name, cap)
+                self._mark_dirty()
+            elif kind == "agent_down":
+                self._on_agent_down(payload)
+            if all(not q for q in self.queues.values()) and not self.jobs:
+                break
+        self._record()
+        R = self.alloc.R
+        return SimResult(
+            makespan=self.now,
+            timeline=np.array(self.timeline) if self.timeline else np.zeros((0, 1 + 2 * R)),
+            n_resources=R,
+            job_durations=self.job_durations,
+            tasks_speculated=self.n_spec,
+            tasks_requeued_on_failure=self.n_requeued,
+        )
+
+
+# -- the paper's experiment setups ------------------------------------------
+
+# Demands follow the paper §3.3: Pi executors (2 CPU, 2 GB), WordCount
+# (1 CPU, 3.5 GB). On the heterogeneous cluster the fluid optimum is exactly
+# 12 Pi + 12 WC executors — both resources bind, so packing quality is the
+# throughput limiter (as in the paper's Figures 3-5).
+PI = JobSpec(group="Pi", demand=(2.0, 2.0), n_tasks=40, mean_task_s=8.0, max_executors=12)
+WC = JobSpec(group="WordCount", demand=(1.0, 3.5), n_tasks=40, mean_task_s=8.0, max_executors=12)
+
+HETEROGENEOUS_AGENTS = (
+    [(f"type1-{i}", (4.0, 14.0)) for i in range(2)]
+    + [(f"type2-{i}", (8.0, 8.0)) for i in range(2)]
+    + [(f"type3-{i}", (6.0, 11.0)) for i in range(2)]
+)
+HOMOGENEOUS_AGENTS = [(f"type3-{i}", (6.0, 11.0)) for i in range(6)]
+
+
+def run_paper_experiment(criterion, mode, agents=None, server_policy="rrr",
+                         jobs_per_queue=10, seed=0, **kw) -> SimResult:
+    cfg = SimConfig(criterion=criterion, server_policy=server_policy, mode=mode,
+                    jobs_per_queue=jobs_per_queue, seed=seed, **kw)
+    sim = SparkMesosSim(agents or HETEROGENEOUS_AGENTS, {"Pi": PI, "WordCount": WC}, cfg)
+    return sim.run()

@@ -1,0 +1,12 @@
+# Pallas TPU kernels for the framework's compute hot-spots.
+#
+# Each kernel package ships three modules:
+#   kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+#   ops.py    — jit'd public wrapper (interpret=True on CPU for validation)
+#   ref.py    — pure-jnp oracle used by the allclose test sweeps
+#
+# Kernels:
+#   psdsf_score     — THE PAPER's fleet-scale hot-spot: fused PS-DSF/rPS-DSF
+#                     score tiles + masked argmin over (frameworks x servers)
+#   flash_attention — causal/sliding-window/GQA attention (train + prefill)
+#   rwkv6           — chunked WKV6 recurrence (data-dependent decay)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / GQA).
+
+Online-softmax tiling: grid (batch*heads, S/BQ, T/BK) with the key axis
+innermost; running (max, sum, acc) state lives in VMEM scratch across the
+sequential BK sweep.  Block shapes default to (128, 128) q x k tiles with the
+full head_dim resident — q/k/v tiles and the f32 accumulator for D<=256 fit
+comfortably in ~16 MB VMEM.
+
+GQA is expressed in the BlockSpec index maps: query head h reads kv head
+h // group_size, so no materialized repeat of k/v.
+
+Sliding-window masking is positional (q_pos - k_pos < window), matching
+``repro.nn.layers.causal_window_mask``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, causal: bool, window: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)            # (BK, D)
+    v = v_ref[0].astype(jnp.float32)            # (BK, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (BQ, BK)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # (BQ, BK)
+    alpha = jnp.exp(m_prev - m_new)              # (BQ, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)       # fully-masked rows -> 0
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """q: (B, H, S, D); k/v: (B, K, T, D) with H % K == 0 -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    assert H % K == 0
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    scale = 1.0 / (D ** 0.5)
+
+    qr = q.reshape(B * H, S, D)
+    kr = k.reshape(B * K, T, D)
+    vr = v.reshape(B * K, T, D)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, window=window, scale=scale
+    )
+
+    def kv_index(bh, qi, ki):
+        # query stream bh = b * H + h reads kv stream b * K + h // G
+        b = bh // H
+        h = bh % H
+        return (b * K + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // bq, T // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, D)

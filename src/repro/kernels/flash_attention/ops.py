@@ -1,0 +1,22 @@
+"""Public flash-attention wrapper: model layout (B,S,H,D), CPU interpret
+fallback, TPU Pallas on device."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool | None = None):
+    """q: (B,S,H,D); k/v: (B,T,K,D) -> (B,S,H,D)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, bq=bq, bk=bk,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (same mask semantics as the model's
+XLA attention path in repro.nn.layers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,S,D); k/v: (B,K,T,D), H % K == 0 -> (B,H,S,D), f32 math."""
+    B, H, S, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) / np.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no unmasked key -> zeros (matches kernel semantics)
+    any_valid = mask.any(axis=-1)[None, None, None, :, None]
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    out = jnp.where(any_valid, out, 0.0)
+    return out.reshape(B, H, S, D).astype(q.dtype)

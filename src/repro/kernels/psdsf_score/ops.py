@@ -1,0 +1,56 @@
+"""Public wrapper for the fused PS-DSF argmin: pads to tile multiples, runs
+the Pallas kernel (interpret=True on CPU), reduces tile partials."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.psdsf_score.kernel import BIG, psdsf_argmin_tiles
+
+
+def _pad_to(a, n, axis, value):
+    pad = n - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def psdsf_argmin(x, phi, d, res, *, bn: int = 128, bj: int = 128,
+                 interpret: bool | None = None):
+    """Fused feasibility-masked PS-DSF argmin over (frameworks x servers).
+
+    x (N,), phi (N,), d (N, R), res (J, R) -> (min_value, n, j);
+    n == -1 when no feasible pair exists.  Use residual capacities for
+    rPS-DSF, full capacities for PS-DSF (the criterion difference is entirely
+    in what you pass as `res`).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    N, R = d.shape
+    J = res.shape[0]
+    bn = min(bn, max(8, 1 << (N - 1).bit_length()))
+    bj = min(bj, max(8, 1 << (J - 1).bit_length()))
+    Np = int(np.ceil(N / bn)) * bn
+    Jp = int(np.ceil(J / bj)) * bj
+    # padding rows: infeasible by construction (demand BIG, residual 0)
+    xp = _pad_to(x.astype(jnp.float32), Np, 0, 1.0)
+    pp = _pad_to(phi.astype(jnp.float32), Np, 0, 1.0)
+    dp = _pad_to(d.astype(jnp.float32), Np, 0, float(BIG))
+    rp = _pad_to(res.astype(jnp.float32), Jp, 0, 0.0)
+
+    mins, args = psdsf_argmin_tiles(xp, pp, dp, rp, bn=bn, bj=bj,
+                                    interpret=interpret)
+    k = jnp.argmin(mins.reshape(-1))
+    val = mins.reshape(-1)[k]
+    enc = args.reshape(-1)[k]
+    n = enc // Jp
+    j = enc % Jp
+    bad = (val >= BIG) | (n >= N) | (j >= J)
+    return (
+        val,
+        jnp.where(bad, -1, n).astype(jnp.int32),
+        jnp.where(bad, -1, j).astype(jnp.int32),
+    )

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the PS-DSF scoring/argmin kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 3.4e38
+
+
+def psdsf_argmin_ref(x, phi, d, res):
+    """-> (min_value, n, j) over feasible pairs; (BIG, -1, -1) if none."""
+    x = x.astype(jnp.float32)
+    phi = phi.astype(jnp.float32)
+    d = d.astype(jnp.float32)
+    res = res.astype(jnp.float32)
+    ok = res[None, :, :] > 0.0                              # (1, J, R)
+    frac = jnp.where(ok, d[:, None, :] / jnp.where(ok, res[None], 1.0), BIG)
+    frac = jnp.where((d[:, None, :] == 0.0) & ~ok, 0.0, frac)
+    dom = jnp.max(frac, axis=-1)                            # (N, J)
+    feas = jnp.all(d[:, None, :] <= res[None, :, :], axis=-1)
+    score = jnp.where(feas, (x / phi)[:, None] * dom, BIG)
+    flat = score.reshape(-1)
+    idx = jnp.argmin(flat)
+    J = res.shape[0]
+    val = flat[idx]
+    n = jnp.where(val >= BIG, -1, idx // J)
+    j = jnp.where(val >= BIG, -1, idx % J)
+    return val, n.astype(jnp.int32), j.astype(jnp.int32)

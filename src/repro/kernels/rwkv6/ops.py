@@ -1,0 +1,26 @@
+"""Public WKV6 wrapper: model layout (B,S,H,D) <-> kernel layout (BH,S,D)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_bhsd
+
+
+def wkv6(r, k, v, logw, u, *, chunk: int = 64, interpret: bool | None = None):
+    """r/k/v/logw: (B,S,H,D); u: (H,D) -> y (B,S,H,D) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S, H, D = r.shape
+    to = lambda t: t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    pad = 0
+    if S % chunk:
+        pad = chunk - S % chunk
+    rs, ks, vs, ws = to(r), to(k), to(v), to(logw)
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        rs, ks, vs, ws = zp(rs), zp(ks), zp(vs), zp(ws)
+    ub = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, D)).reshape(B * H, D)
+    y = wkv6_bhsd(rs, ks, vs, ws, ub, chunk=chunk, interpret=interpret)
+    y = y[:, :S].reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    return y

@@ -1,0 +1,10 @@
+"""Oracle for the WKV6 kernel: the exact lax.scan recurrence."""
+from __future__ import annotations
+
+from repro.nn.ssm import wkv6_scan
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r/k/v/logw: (B,S,H,D); u: (H,D) -> y (B,S,H,D) f32 (exact scan)."""
+    y, _state = wkv6_scan(r, k, v, logw, u)
+    return y

@@ -1,0 +1,249 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline inputs — without allocating a single model byte.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 33 cells x 2 meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+# The two lines below MUST run before any other import (jax locks the device
+# count on first init). Do NOT set this flag anywhere else in the repo.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, canonical, get_config
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.distributed import strategy
+from repro.distributed.sharding import use_mesh_rules
+from repro.launch import hlo_analysis, inputs
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import get_family
+from repro.nn import param as pm
+from repro.train.steps import init_state, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _sharded_bytes(sds_tree) -> float:
+    """Per-device bytes of a ShapeDtypeStruct tree, honoring shardings."""
+    total = 0.0
+    for leaf in jax.tree.leaves(sds_tree):
+        n = leaf.size * leaf.dtype.itemsize
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None:
+            n = n / _shards(sh, leaf.shape)
+        total += n
+    return total
+
+
+def _shards(sharding, shape) -> int:
+    spec = sharding.spec
+    mesh = sharding.mesh
+    k = 1
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        for a in axes:
+            k *= mesh.shape[a]
+    return k
+
+
+def _param_state_specs(cfg, fam, mesh, rules):
+    tmpl = fam.template(cfg)
+    shardings = rules.param_sharding(tmpl, mesh)
+    params = pm.abstract_params(tmpl, dtype=cfg.pdtype(), shardings=shardings)
+    return tmpl, shardings, params
+
+
+PROFILES = {
+    # paper-faithful baseline: dense attention, GSPMD-chosen FSDP collectives,
+    # replicated MoE dispatch grids
+    "baseline": ({"attention_impl": "dense"},
+                 {"_weight_gather": False, "moe_cap": None}),
+    # optimized (§Perf): flash-style chunked attention (incl. MLA) for long
+    # sequences, per-arch MoE dispatch-grid sharding.  Weight-gather FSDP was
+    # tried and REFUTED by measurement (see EXPERIMENTS.md §Perf It.4/It.9);
+    # GSPMD's default (activation psum for MoE, weight-gather for dense) is
+    # kept.
+    "optimized": ({}, {"_weight_gather": False}),
+}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               profile: str = "optimized"):
+    """Lower + compile one cell; returns the artifact dict."""
+    cfg_over, rule_over = PROFILES[profile]
+    cfg = dataclasses.replace(get_config(arch), **cfg_over)
+    fam = get_family(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_rules = strategy.rules_for(cfg)
+    rules = dataclasses.replace(base_rules, rules={**base_rules.rules, **rule_over})
+    t0 = time.time()
+
+    with use_mesh_rules(mesh, rules):
+        tmpl, shardings, params_sds = _param_state_specs(cfg, fam, mesh, rules)
+
+        if shape.kind == "train":
+            tcfg = strategy.train_config_for(cfg, shape_name)
+            f32 = jnp.float32
+            opt_sds = {
+                "m": pm.abstract_params(tmpl, dtype=f32, shardings=shardings),
+                "v": pm.abstract_params(tmpl, dtype=f32, shardings=shardings),
+            }
+            rep = NamedSharding(mesh, P())
+            state_sds = {
+                "params": params_sds,
+                "opt": opt_sds,
+                "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+            }
+            batch_sds = inputs.batch_specs(cfg, shape, mesh, rules)
+            step_fn = make_train_step(cfg, tcfg)
+            lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(state_sds, batch_sds)
+
+        elif shape.kind == "prefill":
+            pre_sds = inputs.prefill_specs(cfg, shape, mesh, rules)
+
+            def prefill_fn(params, batch):
+                return fam.prefill(
+                    params, cfg, batch["tokens"], media=batch.get("media")
+                )
+
+            lowered = jax.jit(prefill_fn).lower(params_sds, pre_sds)
+
+        elif shape.kind == "decode":
+            dec = inputs.decode_specs(cfg, shape, mesh, rules)
+            rep = NamedSharding(mesh, P())
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+
+            def decode_fn(params, cache, tokens, pos):
+                return fam.decode_step(params, cfg, cache, tokens, pos)
+
+            lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
+                params_sds, dec["cache"], dec["tokens"], pos_sds
+            )
+        else:
+            raise ValueError(shape.kind)
+
+        compiled = lowered.compile()
+
+    # ---- extract analysis --------------------------------------------------
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    hlo = hlo_analysis.analyze(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    art = {
+        "profile": profile,
+        "arch": canonical(arch),
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "n_devices": int(n_dev),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "compile_s": round(time.time() - t0, 1),
+        # per-device static memory (exact, from shardings)
+        "param_bytes_per_device": _sharded_bytes(params_sds),
+        "n_params": pm.count_params(tmpl),
+        # XLA-reported (per device; while bodies counted once — see hlo_*)
+        "memory_analysis": None if mem is None else {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            k: cost.get(k) for k in ("flops", "bytes accessed", "transcendentals")
+        },
+        # trip-count-corrected whole-program totals (per device)
+        "hlo_flops": hlo.flops,
+        "hlo_hbm_bytes": hlo.hbm_bytes,
+        "collective_bytes": hlo.collective_bytes,
+        "collective_count": hlo.collective_count,
+        "total_collective_bytes": hlo.total_collective_bytes,
+        "trip_counts": hlo.trip_counts[:12],
+    }
+    return art
+
+
+def run_cells(cells, meshes, out_dir: str, fail_fast: bool = False,
+              profile: str = "optimized"):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch, shape_name in cells:
+        for mesh_name in meshes:
+            tag = f"{canonical(arch)}__{shape_name}__{mesh_name}"
+            path = os.path.join(out_dir, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (artifact exists)")
+                continue
+            print(f"[lower+compile] {tag} ...", flush=True)
+            try:
+                art = build_cell(arch, shape_name, mesh_name == "multi", profile)
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+                print(
+                    f"[ok] {tag}: {art['compile_s']}s, "
+                    f"params/dev={art['param_bytes_per_device']/2**30:.2f}GiB, "
+                    f"flops={art['hlo_flops']:.3e}, "
+                    f"coll={art['total_collective_bytes']:.3e}B",
+                    flush=True,
+                )
+                results.append((tag, "ok"))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+                results.append((tag, f"FAIL {type(e).__name__}"))
+                if fail_fast:
+                    raise
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--profile", default="optimized", choices=list(PROFILES))
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in shapes_for(a)]
+    else:
+        assert args.arch, "--arch required unless --all"
+        shapes = [args.shape] if args.shape else shapes_for(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+
+    results = run_cells(cells, meshes, args.out, args.fail_fast, args.profile)
+    print("\n== dry-run summary ==")
+    for tag, status in results:
+        print(f"{status:24s} {tag}")
+    n_fail = sum(1 for _, s in results if s != "ok")
+    print(f"{len(results) - n_fail}/{len(results)} cells OK")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

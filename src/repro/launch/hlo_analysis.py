@@ -1,0 +1,323 @@
+"""Post-compile HLO analysis for the roofline: FLOPs, HBM bytes, collective
+bytes — parsed from ``compiled.as_text()`` with while-loop trip-count
+multiplication.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits a while
+body ONCE, so scan-over-layers programs (everything here) under-count FLOPs
+and bytes by ~n_layers x accum_steps.  (Verified: a 7-iteration lax.scan
+reports exactly 1/7 the FLOPs of the unrolled version.)
+
+Methodology
+-----------
+* FLOPs: every ``dot`` (matmul) contributes 2 * prod(result dims) * prod(lhs
+  contracting dims).  Dots inside fusions are found by recursing into fused
+  computations.  Elementwise FLOPs are ignored (MFU convention).
+* HBM bytes: for each *top-level* instruction of a non-fused computation,
+  operand bytes + result bytes (post-fusion, top-level instruction boundaries
+  approximate HBM traffic).  Plumbing ops (parameter/tuple/gte/bitcast/while/
+  constant/copy-start...) are excluded.
+* Collectives: result bytes per opcode (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute), counting async -start
+  ops once.
+* Trip counts: extracted from each while condition's largest s32 constant
+  (lax.scan lowers to a counted loop with a `compare(iter, constant(N))`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "opt-barrier",
+    "copy-start", "copy-done", "add-dependency", "domain", "iota",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "async-update",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\("
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALLED_RE = {
+    "while": re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"),
+    "fusion": re.compile(r"calls=%?([\w\.\-]+)"),
+    "call": re.compile(r"to_apply=%?([\w\.\-]+)"),
+    "conditional": re.compile(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w\.\-]+),\s*false_computation=%?([\w\.\-]+))"),
+    "custom-call": re.compile(r"called_computations=\{([^}]*)\}"),
+}
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _type_dims(type_str):
+    """[(dtype, [dims...])] for a (possibly tuple) type string."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str) -> int:
+    total = 0
+    for dtype, dims in _type_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    line: str
+
+    @property
+    def bytes(self) -> int:
+        return _type_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    is_entry: bool = False
+    instrs: dict = dataclasses.field(default_factory=dict)
+    max_const: int = 1
+
+
+def parse_hlo(text: str) -> tuple:
+    """-> (comps: {name: Comp}, entry_name)"""
+    comps: dict[str, Comp] = {}
+    entry = None
+    cur: Comp | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith((" ", "\t")):
+            # computation header: "[ENTRY ]%name (params...) -> type {"
+            if " -> " in line and line.rstrip().endswith("{"):
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    cur = Comp(m.group(2), is_entry=bool(m.group(1)))
+                    comps[cur.name] = cur
+                    if cur.is_entry:
+                        entry = cur.name
+            continue
+        if cur is None:
+            continue
+        for c in _CONST_S32_RE.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, op = m.group(1), m.group(2), m.group(3)
+            cur.instrs[name] = Instr(name, op, type_str, line.strip())
+    if entry is None and comps:
+        # fall back: computation with a 'main' prefix, else the last one
+        entry = next((n for n in comps if n.startswith("main")), list(comps)[-1])
+    return comps, entry
+
+
+def _called(instr: Instr) -> list:
+    """Names of computations this instruction calls (excl. while handled
+    separately)."""
+    if instr.op == "fusion":
+        m = _CALLED_RE["fusion"].search(instr.line)
+        return [m.group(1)] if m else []
+    if instr.op == "call":
+        m = _CALLED_RE["call"].search(instr.line)
+        return [m.group(1)] if m else []
+    if instr.op == "conditional":
+        m = _CALLED_RE["conditional"].search(instr.line)
+        if not m:
+            return []
+        if m.group(1):
+            return [s.strip().lstrip("%") for s in m.group(1).split(",")]
+        return [g for g in (m.group(2), m.group(3)) if g]
+    return []
+
+
+def _dot_flops(comp: Comp, instr: Instr) -> float:
+    dims = _type_dims(instr.type_str)
+    if not dims:
+        return 0.0
+    result_n = 1
+    for d in dims[0][1]:
+        result_n *= d
+    # lhs operand: resolve its shape from the instruction table (operand
+    # types are not inline in scheduled HLO)
+    inside = instr.line.split(instr.op + "(", 1)[1]
+    names = _OPERAND_RE.findall(inside.split(")")[0])
+    contracted = 1
+    m = _DOT_DIMS_RE.search(instr.line)
+    if m and names and names[0] in comp.instrs:
+        lhs_dims_list = _type_dims(comp.instrs[names[0]].type_str)
+        if lhs_dims_list:
+            lhs_dims = lhs_dims_list[0][1]
+            for idx in m.group(1).split(","):
+                if idx != "" and int(idx) < len(lhs_dims):
+                    contracted *= lhs_dims[int(idx)]
+    return 2.0 * result_n * contracted
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_count: dict = dataclasses.field(default_factory=dict)
+    trip_counts: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+            "total_collective_bytes": self.total_collective_bytes,
+            "trip_counts": self.trip_counts,
+        }
+
+
+_SLICE_OPS = ("dynamic-slice", "dynamic-update-slice", "gather", "scatter")
+
+
+def _is_slicing(comps, instr: Instr) -> bool:
+    """True if this instruction (or its fused computation) slices/updates a
+    large buffer in place — its HBM traffic is bounded by the slice, not the
+    buffer (XLA aliases loop-state buffers)."""
+    if instr.op in ("dynamic-slice", "dynamic-update-slice"):
+        return True
+    if instr.op == "fusion":
+        m = _CALLED_RE["fusion"].search(instr.line)
+        if m and m.group(1) in comps:
+            return any(i.op in _SLICE_OPS for i in comps[m.group(1)].instrs.values())
+    return False
+
+
+def analyze(text: str) -> Totals:
+    comps, entry = parse_hlo(text)
+    totals = Totals(collective_bytes=defaultdict(float), collective_count=defaultdict(float))
+
+    def operand_bytes(comp: Comp, instr: Instr) -> int:
+        inside = instr.line.split(instr.op + "(", 1)
+        if len(inside) < 2:
+            return 0
+        b = 0
+        seen = set()
+        for name in _OPERAND_RE.findall(inside[1].split(")")[0]):
+            if name in comp.instrs and name not in seen:
+                seen.add(name)
+                b += comp.instrs[name].bytes
+        return b
+
+    def visit(comp_name: str, mult: float, top_level: bool, depth=0):
+        if comp_name not in comps or depth > 64:
+            return
+        comp = comps[comp_name]
+        for instr in comp.instrs.values():
+            op = instr.op
+            if op == "dot":
+                totals.flops += mult * _dot_flops(comp, instr)
+            if op == "while":
+                m = _CALLED_RE["while"].search(instr.line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    mt = _TRIP_RE.search(instr.line)
+                    if mt:
+                        trips = int(mt.group(1))  # backend_config known_trip_count
+                    else:
+                        trips = comps[cond].max_const if cond in comps else 1
+                    totals.trip_counts.append((body, trips))
+                    visit(body, mult * max(trips, 1), top_level=top_level, depth=depth + 1)
+                continue
+            base = op.replace("-start", "")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                b = instr.bytes
+                totals.collective_bytes[base] += mult * b
+                totals.collective_count[base] += mult
+            if top_level and op not in _SKIP_BYTES_OPS and base not in COLLECTIVES:
+                ob = operand_bytes(comp, instr)
+                traffic = instr.bytes + ob
+                if _is_slicing(comps, instr):
+                    # exclude the aliased giant (result or operand, whichever
+                    # is largest); what remains approximates the slice traffic
+                    traffic -= max(instr.bytes, ob)
+                totals.hbm_bytes += mult * traffic
+            for callee in _called(instr):
+                # fused computations: count their dots, never their bytes
+                visit(callee, mult, top_level=False, depth=depth + 1)
+
+    if entry:
+        visit(entry, 1.0, top_level=True)
+    totals.collective_bytes = dict(totals.collective_bytes)
+    totals.collective_count = dict(totals.collective_count)
+    return totals
+
+
+def top_instructions(text: str, n: int = 20):
+    """Top-n top-level instructions by bytes x trip-multiplier (profiling
+    aid for the perf loop: what actually dominates HBM traffic)."""
+    comps, entry = parse_hlo(text)
+    rows = []
+
+    def operand_bytes(comp, instr):
+        inside = instr.line.split(instr.op + "(", 1)
+        if len(inside) < 2:
+            return 0
+        b, seen = 0, set()
+        for name in _OPERAND_RE.findall(inside[1].split(")")[0]):
+            if name in comp.instrs and name not in seen:
+                seen.add(name)
+                b += comp.instrs[name].bytes
+        return b
+
+    def visit(comp_name, mult, depth=0):
+        if comp_name not in comps or depth > 64:
+            return
+        comp = comps[comp_name]
+        for instr in comp.instrs.values():
+            if instr.op == "while":
+                m = _CALLED_RE["while"].search(instr.line)
+                if m:
+                    mt = _TRIP_RE.search(instr.line)
+                    trips = int(mt.group(1)) if mt else comps.get(
+                        m.group(1), Comp("")).max_const
+                    visit(m.group(2), mult * max(trips, 1), depth + 1)
+                continue
+            if instr.op in _SKIP_BYTES_OPS:
+                continue
+            base = instr.op.replace("-start", "")
+            if base in COLLECTIVES:
+                continue
+            b = (instr.bytes + operand_bytes(comp, instr)) * mult
+            rows.append((b, comp_name, instr.op, instr.type_str[:48],
+                         instr.line[:110]))
+    if entry:
+        visit(entry, 1.0)
+    rows.sort(reverse=True)
+    return rows[:n]

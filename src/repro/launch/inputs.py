@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.distributed.sharding import ShardingRules
+from repro.models.common import get_family
+from repro.nn.config import ModelConfig
+
+
+def _sds(shape, dtype, mesh, rules, axes):
+    spec = rules.pspec(axes, shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules: ShardingRules):
+    """Inputs for a train step: {tokens, labels[, media]}."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((B, S), jnp.int32, mesh, rules, ("batch", "seq")),
+        "labels": _sds((B, S), jnp.int32, mesh, rules, ("batch", "seq")),
+    }
+    if cfg.family in ("encdec", "vlm"):
+        out["media"] = _sds(
+            (B, cfg.n_media_tokens, cfg.d_model), jnp.float32, mesh, rules,
+            ("batch", None, "embed_act"),
+        )
+    return out
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules: ShardingRules):
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, rules, ("batch", "seq"))}
+    if cfg.family in ("encdec", "vlm"):
+        out["media"] = _sds(
+            (B, cfg.n_media_tokens, cfg.d_model), jnp.float32, mesh, rules,
+            ("batch", None, "embed_act"),
+        )
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules: ShardingRules):
+    """Decode caches as SDS with the family's cache sharding rules."""
+    fam = get_family(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: fam.init_cache(cfg, B, S))
+    axes = fam.cache_logical_axes(cfg)
+    return {
+        k: _sds(v.shape, v.dtype, mesh, rules, axes[k]) for k, v in shapes.items()
+    }
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules: ShardingRules):
+    B = shape.global_batch
+    tokens = _sds((B, 1), jnp.int32, mesh, rules, ("batch", None))
+    cache = cache_specs(cfg, shape, mesh, rules)
+    return {"tokens": tokens, "cache": cache}

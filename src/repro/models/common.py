@@ -1,0 +1,109 @@
+"""Shared model machinery: embeddings, losses, scan-over-layers, registry."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn.config import ModelConfig
+from repro.nn.layers import rmsnorm, rmsnorm_template
+from repro.nn.param import spec
+
+
+def embed_template(cfg: ModelConfig):
+    t = {
+        "tok": spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                    init="embed", scale=0.02),
+        "final_norm": rmsnorm_template(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                            scale=0.02)
+    return t
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    from repro.distributed.sharding import weight_gather
+    tok = weight_gather(params["tok"], ("vocab", "embed"))
+    x = jnp.take(tok, tokens, axis=0).astype(cfg.cdtype())
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(jnp.array(cfg.d_model, x.dtype))
+    return constrain(x, ("batch", "seq", "embed_act"))
+
+
+def unembed(params, cfg: ModelConfig, x):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x, params["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x, params["unembed"].astype(x.dtype))
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, ("batch", "seq", "vocab_act"))
+
+
+def lm_loss(logits, labels, mask=None, z_weight: float = 1e-4):
+    """Cross-entropy + z-loss; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0) if mask is None else (mask & (labels >= 0))
+    valid = valid.astype(jnp.float32)
+    ce = (lse - ll) * valid
+    z = jnp.square(lse) * valid
+    denom = jnp.maximum(valid.sum(), 1.0)
+    return ce.sum() / denom + z_weight * z.sum() / denom
+
+
+def remat_wrap(fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def scan_layers(body: Callable, x, stacked_params, xs_extra, cfg: ModelConfig,
+                collect_ys: bool = False):
+    """jax.lax.scan over the layer stack with remat'd body.
+
+    body(carry_x, (layer_params, *extra)) -> (carry_x, ys_or_None)
+    """
+    wrapped = remat_wrap(body, cfg.remat)
+
+    def scan_body(carry, inp):
+        out, ys = wrapped(carry, inp)
+        return out, ys
+
+    x, ys = jax.lax.scan(scan_body, x, (stacked_params, *xs_extra))
+    return (x, ys) if collect_ys else x
+
+
+# -- registry ----------------------------------------------------------------
+
+_REGISTRY: dict[str, Any] = {}
+
+
+def register_family(name: str):
+    def deco(mod):
+        _REGISTRY[name] = mod
+        return mod
+    return deco
+
+
+def get_family(cfg_or_name) -> Any:
+    name = cfg_or_name if isinstance(cfg_or_name, str) else cfg_or_name.family
+    # import model modules lazily to avoid cycles
+    import repro.models.lm          # noqa: F401
+    import repro.models.rwkv        # noqa: F401
+    import repro.models.hymba       # noqa: F401
+    import repro.models.encdec      # noqa: F401
+    import repro.models.vlm         # noqa: F401
+    return _REGISTRY[name]

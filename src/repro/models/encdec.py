@@ -1,0 +1,209 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, n_media_tokens, d_model).  Encoder layers are
+bidirectional self-attention; decoder layers are causal self-attention +
+cross-attention over encoder output.  Sinusoidal absolute positions (the
+learned decoder table is replaced by sinusoids so arbitrary decode lengths
+lower cleanly; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.config import ModelConfig
+from repro.nn.param import stack_template
+from repro.models import common as C
+
+
+def enc_layer_template(cfg: ModelConfig):
+    return {
+        "ln1": L.rmsnorm_template(cfg.d_model),
+        "attn": L.attention_template(cfg),
+        "ln2": L.rmsnorm_template(cfg.d_model),
+        "ffn": L.mlp_template(cfg, gated=False),
+    }
+
+
+def dec_layer_template(cfg: ModelConfig):
+    return {
+        "ln1": L.rmsnorm_template(cfg.d_model),
+        "attn": L.attention_template(cfg),
+        "lnx": L.rmsnorm_template(cfg.d_model),
+        "xattn": L.cross_attention_template(cfg),
+        "ln2": L.rmsnorm_template(cfg.d_model),
+        "ffn": L.mlp_template(cfg, gated=False),
+    }
+
+
+def template(cfg: ModelConfig):
+    return {
+        "embed": C.embed_template(cfg),
+        "enc_norm": L.rmsnorm_template(cfg.d_model),
+        "encoder": stack_template(enc_layer_template(cfg), cfg.n_encoder_layers),
+        "decoder": stack_template(dec_layer_template(cfg), cfg.n_layers),
+    }
+
+
+def encode(params, cfg: ModelConfig, media):
+    """media: (B, M, E) precomputed frame embeddings (frontend stub)."""
+    B, M, E = media.shape
+    pos = jnp.arange(M, dtype=jnp.int32)
+    x = media.astype(cfg.cdtype()) + L.sinusoidal_pos(pos, E)[None].astype(cfg.cdtype())
+
+    def body(x, inp):
+        (lp,) = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        positions = jnp.broadcast_to(pos, (B, M))
+        # bidirectional: mask = all ones
+        q, k, v = L._qkv(lp["attn"], cfg, h, positions, use_rope=False)
+        ones = jnp.ones((1, 1, 1, M, M), bool)
+        a = L._gqa_scores_softmax_out(cfg, q, k, v, ones)
+        a = jnp.einsum("bshd,hde->bse", a, lp["attn"]["wo"].astype(h.dtype))
+        x = x + a
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        return x, None
+
+    x = C.scan_layers(body, x, params["encoder"], (), cfg)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_body_full(cfg, enc_out, positions):
+    def body(x, inp):
+        (lp,) = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h = L.attention_apply(lp["attn"], cfg, h, positions, True, use_rope=False)
+        x = x + h
+        h = L.rmsnorm(lp["lnx"], x, cfg.norm_eps)
+        x = x + L.cross_attention_apply(lp["xattn"], cfg, h, enc_out)
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        return x, None
+    return body
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, media=None):
+    """Teacher-forcing: media (B,M,E) + decoder tokens (B,S) -> logits."""
+    assert media is not None, "enc-dec forward needs media embeddings"
+    B, Sq = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    enc_out = encode(params, cfg, media)
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    x = x + L.sinusoidal_pos(positions[0], cfg.d_model)[None].astype(x.dtype)
+    x = C.scan_layers(_dec_body_full(cfg, enc_out, positions), x, params["decoder"], (), cfg)
+    return C.unembed(params["embed"], cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    Lc, M = cfg.n_layers, cfg.n_media_tokens
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((Lc, batch, max_seq, K, D), dtype),
+        "v": jnp.zeros((Lc, batch, max_seq, K, D), dtype),
+        # cross-attention K/V cached ONCE at prefill (perf iteration #3:
+        # recomputing enc projections per decoded token dominated both the
+        # compute and memory terms of the decode roofline)
+        "xk": jnp.zeros((Lc, batch, M, K, D), dtype),
+        "xv": jnp.zeros((Lc, batch, M, K, D), dtype),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+        "xk": ("layers", "batch", None, "kv_heads", None),
+        "xv": ("layers", "batch", None, "kv_heads", None),
+    }
+
+
+def _cross_kv(lp, cfg, enc_out):
+    """Per-layer cross K/V from encoder output (cached at prefill)."""
+    dt = enc_out.dtype
+    k = jnp.einsum("bme,ekd->bmkd", enc_out, lp["xattn"]["wk"].astype(dt))
+    v = jnp.einsum("bme,ekd->bmkd", enc_out, lp["xattn"]["wv"].astype(dt))
+    k = L.rmsnorm(lp["xattn"]["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def encode_to_cache(params, cfg: ModelConfig, media, cache):
+    """Fill the cross-KV slots of a fresh cache from media embeddings."""
+    enc_out = encode(params, cfg, media)
+
+    def body(_, inp):
+        (lp,) = inp
+        k, v = _cross_kv(lp, cfg, enc_out)
+        return _, (k.astype(cache["xk"].dtype), v.astype(cache["xv"].dtype))
+
+    _, (xk, xv) = jax.lax.scan(body, 0, (params["decoder"],))
+    return {**cache, "xk": xk, "xv": xv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, media=None):
+    """One decoder token; cross-attends the CACHED cross K/V."""
+    del media
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    x = x + L.sinusoidal_pos(jnp.full((1,), pos, jnp.int32), cfg.d_model)[None].astype(x.dtype)
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a, ck, cv = L.attention_decode(lp["attn"], cfg, h, ck, cv, pos, True, use_rope=False)
+        x = x + a
+        h = L.rmsnorm(lp["lnx"], x, cfg.norm_eps)
+        x = x + L.cross_attention_cached(lp["xattn"], cfg, h,
+                                         xk.astype(h.dtype), xv.astype(h.dtype))
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        return x, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    logits = C.unembed(params["embed"], cfg, x)
+    return logits, {**cache, "k": ck, "v": cv}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq=None, media=None):
+    assert media is not None
+    B, Sq = tokens.shape
+    T = max_seq or Sq
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    enc_out = encode(params, cfg, media)
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    x = x + L.sinusoidal_pos(positions[0], cfg.d_model)[None].astype(x.dtype)
+    dtype = jnp.bfloat16
+
+    def body(x, inp):
+        (lp,) = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], cfg, h, positions, use_rope=False)
+        a = L.attention_core(cfg, q, k, v, positions, positions, True)
+        a = jnp.einsum("bshd,hde->bse", a, lp["attn"]["wo"].astype(h.dtype))
+        x = x + a
+        h = L.rmsnorm(lp["lnx"], x, cfg.norm_eps)
+        x = x + L.cross_attention_apply(lp["xattn"], cfg, h, enc_out)
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        pad = [(0, 0), (0, T - Sq), (0, 0), (0, 0)]
+        from repro.distributed.sharding import constrain
+        axes = ("batch", "cache_seq", "kv_heads", None)
+        xk, xv = _cross_kv(lp, cfg, enc_out)
+        return x, (constrain(jnp.pad(k.astype(dtype), pad), axes),
+                   constrain(jnp.pad(v.astype(dtype), pad), axes),
+                   xk.astype(dtype), xv.astype(dtype))
+
+    x, (ck, cv, xk, xv) = C.scan_layers(body, x, params["decoder"], (), cfg,
+                                        collect_ys=True)
+    logits = C.unembed(params["embed"], cfg, x[:, -1:])
+    return logits, {"k": ck, "v": cv, "xk": xk, "xv": xv}
+
+
+C.register_family("encdec")(sys.modules[__name__])

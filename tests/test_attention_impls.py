@@ -1,0 +1,110 @@
+"""Equality of the three attention implementations: dense XLA, chunked XLA
+(flash-style scan), and the Pallas kernel — plus MLA f32 exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.nn import layers as L
+
+
+def _cfg(window=0, kblock=32, impl="chunked"):
+    base = get_config("qwen3_8b", smoke=True)
+    return dataclasses.replace(
+        base, window=window, attention_impl=impl, attention_kblock=kblock,
+        compute_dtype="float32",
+    )
+
+
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("S", [128, 256])
+def test_chunked_equals_dense(window, S):
+    cfg = _cfg(window=window)
+    B, H, K, D = 2, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(jax.random.key(S + window), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    chunked = L._gqa_chunked_attention(cfg, q, k, v, pos, pos,
+                                       jnp.array(window == 0), kblock=32)
+    mask = L.causal_window_mask(pos, pos, cfg.window, jnp.array(window == 0))
+    dense = L._gqa_scores_softmax_out(cfg, q, k, v, mask[:, None, None])
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), atol=2e-5)
+
+
+def test_chunked_gradients_match_dense():
+    cfg = _cfg()
+    B, S, H, K, D = 1, 128, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def f_chunked(q):
+        return jnp.sum(L._gqa_chunked_attention(
+            cfg, q, k, v, pos, pos, jnp.array(True), kblock=32) ** 2)
+
+    def f_dense(q):
+        mask = L.causal_window_mask(pos, pos, 0, jnp.array(True))
+        return jnp.sum(L._gqa_scores_softmax_out(
+            cfg, q, k, v, mask[:, None, None]) ** 2)
+
+    g1 = jax.grad(f_chunked)(q)
+    g2 = jax.grad(f_dense)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-4)
+
+
+def test_attention_core_dispatch():
+    """attention_core picks chunked only when T is big enough + divisible."""
+    cfg = _cfg(kblock=32)
+    B, S = 1, 48  # < 2*kblock -> dense
+    q = jnp.ones((B, S, cfg.n_heads, cfg.head_dim))
+    k = jnp.ones((B, S, cfg.n_kv_heads, cfg.head_dim))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = L.attention_core(cfg, q, k, k, pos, pos, jnp.array(True))
+    assert out.shape == q.shape
+
+
+def test_pallas_kernel_equals_chunked_xla():
+    """The Pallas kernel and its XLA twin implement the same function."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    cfg = _cfg(window=24)
+    B, S, H, K, D = 1, 128, 4, 2, 16
+    cfg = dataclasses.replace(cfg, n_heads=H, n_kv_heads=K, head_dim=D)
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    xla = L._gqa_chunked_attention(cfg, q, k, v, pos, pos, jnp.array(False),
+                                   kblock=32)
+    pallas = flash_attention(q, k, v, causal=True, window=24, bq=32, bk=32,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pallas), atol=3e-5)
+
+
+def test_mla_decode_exact_in_f32():
+    """MLA absorbed-query decode == full-rank forward, exactly, in f32."""
+    cfg = dataclasses.replace(get_config("deepseek_v2_236b", smoke=True),
+                              compute_dtype="float32")
+    from repro.models.common import get_family
+    from repro.nn.param import init_params
+
+    fam = get_family(cfg)
+    params = init_params(fam.template(cfg), jax.random.key(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)
+    full = fam.forward(params, cfg, tokens)
+    cache = fam.init_cache(cfg, B, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = fam.decode_step(params, cfg, cache, tokens[:, t:t+1], t)
+        outs.append(logits)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-5)

@@ -1,0 +1,131 @@
+"""Beyond-paper extensions: placement constraints (the setting of the
+paper's TSF reference, Wang+ SC'16) and weighted priorities (phi appears in
+the paper's formulas but is only evaluated at phi=1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.gang import GangScheduler, JobSpec
+from repro.core.filling import FillConfig, progressive_fill
+from repro.core.instance import make_instance
+from repro.core.online import OnlineAllocator
+
+
+def _inst(allowed=None, weights=None):
+    return make_instance(
+        demands=[[5.0, 1.0], [1.0, 5.0]],
+        capacities=[[100.0, 30.0], [30.0, 100.0]],
+        weights=weights, allowed=allowed,
+    )
+
+
+# -- placement constraints ---------------------------------------------------
+
+@pytest.mark.parametrize("crit", ["drf", "tsf", "psdsf", "rpsdsf"])
+@pytest.mark.parametrize("pol", ["rrr", "pooled", "bestfit"])
+def test_constraints_never_violated(crit, pol):
+    allowed = np.array([[True, False], [True, True]])
+    inst = _inst(allowed=allowed)
+    cfg = FillConfig(criterion=crit, server_policy=pol, lookahead=False, tie="random")
+    r = progressive_fill(inst, cfg, seed=3)
+    assert r.x[0, 1] == 0  # framework 1 may not use server 2
+    assert not inst.feasible(r.x).any()  # still fills to saturation
+
+
+def test_tsf_normalizes_by_allowed_monopoly():
+    """Under constraints, TSF + alignment-aware server selection gives the
+    constrained framework nearly its whole reachable share (the
+    sharing-incentive property TSF targets). Server selection matters: with
+    lexicographic server ties, the unconstrained framework's early grants
+    land on the contested server and strand its memory — best-fit avoids it."""
+    allowed = np.array([[True, False], [True, True]])
+    inst = _inst(allowed=allowed)
+    cfg = FillConfig(criterion="tsf", server_policy="bestfit", lookahead=False)
+    r = progressive_fill(inst, cfg, seed=0)
+    # fw1's monopoly over server1 alone = min(100/5, 30/1) = 20 tasks
+    assert r.x[0, 0] >= 15
+    assert r.x[0, 1] == 0
+    assert r.x[1, 1] >= 15
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mask=st.lists(st.booleans(), min_size=4, max_size=4),
+    crit=st.sampled_from(["drf", "psdsf", "rpsdsf"]),
+    seed=st.integers(0, 100),
+)
+def test_constraints_property(mask, crit, seed):
+    allowed = np.array(mask, bool).reshape(2, 2)
+    if not allowed.any(axis=1).all():
+        allowed[0, 0] = True  # every framework needs >= 1 allowed server
+        allowed[1, 1] = True
+    inst = _inst(allowed=allowed)
+    cfg = FillConfig(criterion=crit, server_policy="rrr", lookahead=False, tie="random")
+    r = progressive_fill(inst, cfg, seed=seed)
+    assert (r.x[~allowed] == 0).all()
+    assert (r.residual >= -1e-6).all()
+
+
+def test_online_allocator_respects_allowed_agents():
+    al = OnlineAllocator(2, criterion="rpsdsf", mode="characterized", seed=0)
+    al.add_agent("a", (10.0, 10.0))
+    al.add_agent("b", (10.0, 10.0))
+    al.register("pinned", demand=(2.0, 2.0), wanted_tasks=10,
+                allowed_agents=["a"])
+    al.allocate()
+    fw = al.frameworks["pinned"]
+    assert "b" not in fw.tasks or not fw.tasks["b"]
+    assert len(fw.tasks.get("a", [])) == 5  # fills its allowed agent
+
+
+def test_gang_scheduler_slice_type_constraints():
+    gs = GangScheduler(criterion="rpsdsf")
+    gs.add_slice("fat0", "v5e-64-fat-host")
+    gs.add_slice("std0", "v5e-64")
+    gs.submit(JobSpec("pinned", "x", "s", 8, (16.0, 100.0, 16.0, 50.0),
+                      allowed_slice_types=("v5e-64",)))
+    gs.schedule()
+    placed = gs.placement("pinned")
+    assert set(placed) <= {"std0"}
+
+
+# -- weighted priorities -----------------------------------------------------
+
+def test_weighted_progressive_filling_tilts_allocation():
+    eq = progressive_fill(
+        _inst(), FillConfig(criterion="drf", server_policy="pooled", lookahead=False),
+        seed=0,
+    )
+    hi = progressive_fill(
+        _inst(weights=[4.0, 1.0]),
+        FillConfig(criterion="drf", server_policy="pooled", lookahead=False),
+        seed=0,
+    )
+    assert hi.totals[0] > eq.totals[0]
+    assert hi.totals[0] > 2 * hi.totals[1]  # ~4x weight => much larger share
+
+
+def test_online_allocator_priorities():
+    al = OnlineAllocator(2, criterion="drf", mode="characterized", seed=0)
+    al.add_agent("a", (12.0, 12.0))
+    al.register("hi", demand=(1.0, 1.0), wanted_tasks=100, phi=3.0)
+    al.register("lo", demand=(1.0, 1.0), wanted_tasks=100, phi=1.0)
+    al.allocate()
+    n_hi = al.frameworks["hi"].n_tasks
+    n_lo = al.frameworks["lo"].n_tasks
+    assert n_hi + n_lo == 12
+    assert n_hi >= 2.5 * n_lo  # ~3:1 split
+
+
+def test_gang_scheduler_priority_share():
+    gs = GangScheduler(criterion="drf")
+    gs.add_slice("fat0", "v5e-64-fat-host")
+    gs.submit(JobSpec("prod", "x", "s", 100, (16.0, 100.0, 16.0, 50.0),
+                      priority=3.0))
+    gs.submit(JobSpec("dev", "y", "s", 100, (16.0, 100.0, 16.0, 50.0),
+                      priority=1.0))
+    gs.schedule()
+    n_prod = sum(gs.placement("prod").values())
+    n_dev = sum(gs.placement("dev").values())
+    assert n_prod + n_dev == 4  # 64 chips / 16 per gang unit
+    assert n_prod >= n_dev

@@ -1,0 +1,174 @@
+"""Unit + property tests for the fairness criteria and filling engines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fairness
+from repro.core.filling import FillConfig, PAPER_SCHEDULERS, progressive_fill, run_trials
+from repro.core.instance import Instance, make_instance, paper_example
+
+
+# ---------------------------------------------------------------------------
+# hand-computed score checks on the paper's example
+# ---------------------------------------------------------------------------
+
+def test_drf_scores_hand():
+    inst = paper_example()
+    X = np.array([[3, 0], [0, 2]])  # x1=3 tasks, x2=2 tasks
+    s = fairness.drf_scores(X, inst.demands, inst.capacities, inst.weights, lookahead=False)
+    # cluster totals (130, 130); dominant demand of each framework is 5
+    np.testing.assert_allclose(s, [3 * 5 / 130, 2 * 5 / 130])
+
+
+def test_psdsf_scores_hand():
+    inst = paper_example()
+    X = np.array([[2, 0], [0, 0]])
+    K = fairness.psdsf_scores(X, inst.demands, inst.capacities, inst.weights, lookahead=False)
+    # K[0,0] = 2 * max(5/100, 1/30) = 2*0.05 ; K[0,1] = 2 * max(5/30, 1/100)
+    np.testing.assert_allclose(K[0], [2 * 0.05, 2 * 5 / 30])
+    np.testing.assert_allclose(K[1], [0.0, 0.0])
+
+
+def test_rpsdsf_uses_residuals():
+    inst = paper_example()
+    X = np.array([[10, 0], [0, 0]])  # server 1 residual: (50, 20)
+    K = fairness.psdsf_scores(
+        X, inst.demands, inst.capacities, inst.weights, residual=True, lookahead=False
+    )
+    np.testing.assert_allclose(K[0, 0], 10 * max(5 / 50, 1 / 20))
+
+
+def test_exhausted_server_scores_inf():
+    inst = paper_example()
+    X = np.array([[20, 0], [0, 0]])  # server 1: r1 exhausted
+    K = fairness.psdsf_scores(
+        X, inst.demands, inst.capacities, inst.weights, residual=True, lookahead=True
+    )
+    assert K[0, 0] > 1e17  # unusable
+
+
+# ---------------------------------------------------------------------------
+# Table 1/3 reproduction (deterministic rows: exact; RRR rows: tolerance)
+# ---------------------------------------------------------------------------
+
+def test_table1_psdsf_exact():
+    r = progressive_fill(paper_example(), PAPER_SCHEDULERS["PS-DSF"], seed=0)
+    np.testing.assert_array_equal(r.x, [[19, 0], [2, 20]])
+    np.testing.assert_allclose(r.residual, [[3, 1], [10, 0]])  # Table 3 row
+
+
+def test_table1_rpsdsf_exact():
+    r = progressive_fill(paper_example(), PAPER_SCHEDULERS["rPS-DSF"], seed=0)
+    np.testing.assert_array_equal(r.x, [[19, 2], [2, 19]])
+    np.testing.assert_allclose(r.residual, [[3, 1], [1, 3]])  # Table 3 row
+
+
+def test_table1_bfdrf_packing():
+    # paper reports 41 total; our one-task-at-a-time engine reaches 42 (see
+    # EXPERIMENTS.md §Paper) — assert the packing-quality claim, not the
+    # unpublished tie-break.
+    r = progressive_fill(paper_example(), PAPER_SCHEDULERS["BF-DRF"], seed=0)
+    assert r.x.sum() in (41, 42)
+    assert r.x[0, 0] >= 19 and r.x[1, 1] >= 19  # aligned placement
+
+
+def test_table1_drf_rrr_stats():
+    x = run_trials(paper_example(), PAPER_SCHEDULERS["DRF"], 200, seed=1)
+    mean = x.mean(0)
+    # paper: (6.55, 4.69; 4.69, 6.55), std (2.31, .46); allow CI slack
+    assert abs(mean[0, 0] - 6.55) < 0.6 and abs(mean[0, 1] - 4.69) < 0.3
+    assert abs(mean[1, 1] - 6.55) < 0.6 and abs(mean[1, 0] - 4.69) < 0.3
+    assert 1.5 < x[:, 0, 0].std(ddof=1) < 3.5
+    assert 17 < x.sum(axis=(1, 2)).mean() < 28  # DRF leaves ~half capacity unused
+
+
+def test_table1_rrr_psdsf_stats():
+    x = run_trials(paper_example(), PAPER_SCHEDULERS["RRR-PS-DSF"], 200, seed=1)
+    mean = x.mean(0)
+    assert abs(mean[0, 0] - 19.44) < 0.7
+    assert abs(mean[0, 1] - 1.15) < 0.7
+    assert 38 < x.sum(axis=(1, 2)).mean() < 43
+
+
+def test_rrr_rpsdsf_equals_pooled_rpsdsf():
+    """Paper: 'RRR-rPS-DSF performed just as rPS-DSF over 200 trials'."""
+    x = run_trials(paper_example(), PAPER_SCHEDULERS["RRR-rPS-DSF"], 50, seed=3)
+    assert (x == np.array([[19, 2], [2, 19]])).all()
+
+
+def test_psdsf_packs_2x_better_than_drf():
+    """The paper's headline: server-aware criteria ~double total workload."""
+    drf = run_trials(paper_example(), PAPER_SCHEDULERS["DRF"], 50, seed=2)
+    ps = progressive_fill(paper_example(), PAPER_SCHEDULERS["PS-DSF"], seed=0)
+    assert ps.x.sum() > 1.7 * drf.sum(axis=(1, 2)).mean()
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants of progressive filling
+# ---------------------------------------------------------------------------
+
+@st.composite
+def instances(draw):
+    n = draw(st.integers(1, 4))
+    j = draw(st.integers(1, 4))
+    r = draw(st.integers(1, 3))
+    dem = draw(
+        st.lists(
+            st.lists(st.floats(0.5, 8.0), min_size=r, max_size=r),
+            min_size=n, max_size=n,
+        )
+    )
+    cap = draw(
+        st.lists(
+            st.lists(st.floats(4.0, 60.0), min_size=r, max_size=r),
+            min_size=j, max_size=j,
+        )
+    )
+    return make_instance(dem, cap)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    inst=instances(),
+    crit=st.sampled_from(["drf", "tsf", "psdsf", "rpsdsf"]),
+    pol=st.sampled_from(["rrr", "pooled", "bestfit"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_filling_invariants(inst, crit, pol, seed):
+    cfg = FillConfig(criterion=crit, server_policy=pol, lookahead=False, tie="random")
+    r = progressive_fill(inst, cfg, seed=seed)
+    # 1. capacity never violated
+    assert (r.residual >= -1e-6).all()
+    # 2. saturation: no further task fits anywhere (the paper's stopping rule)
+    assert not inst.feasible(r.x).any()
+    # 3. allocations are non-negative integers
+    assert (r.x >= 0).all()
+    # 4. grant order length == total tasks
+    assert len(r.order) == r.x.sum()
+
+
+@settings(max_examples=25, deadline=None)
+@given(inst=instances(), seed=st.integers(0, 2**31 - 1))
+def test_rpsdsf_weakly_dominates_psdsf_on_usage(inst, seed):
+    """Residual-awareness should not *hurt* total packing on average.
+
+    Not a theorem per-instance, so we assert a weak bound: rPS-DSF reaches at
+    least 60% of PS-DSF's total (in the paper's studies it is >= 100%).
+    """
+    ps = progressive_fill(
+        inst, FillConfig(criterion="psdsf", server_policy="pooled", lookahead=False), seed=seed
+    )
+    rps = progressive_fill(
+        inst, FillConfig(criterion="rpsdsf", server_policy="pooled", lookahead=False), seed=seed
+    )
+    if ps.x.sum() > 0:
+        assert rps.x.sum() >= 0.6 * ps.x.sum()
+
+
+def test_weighted_frameworks_shift_allocation():
+    """phi weights tilt progressive filling toward the heavier framework."""
+    inst_eq = paper_example()
+    inst_w = Instance(inst_eq.demands, inst_eq.capacities, np.array([3.0, 1.0]))
+    eq = progressive_fill(inst_eq, FillConfig(criterion="drf", server_policy="pooled", lookahead=False), seed=0)
+    w = progressive_fill(inst_w, FillConfig(criterion="drf", server_policy="pooled", lookahead=False), seed=0)
+    assert w.totals[0] > eq.totals[0]

@@ -1,0 +1,72 @@
+"""Agreement tests: JAX vectorized engine vs numpy reference engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.filling import FillConfig, progressive_fill
+from repro.core.filling_jax import fill_trials_jax, progressive_fill_jax
+from repro.core.instance import make_instance, paper_example
+
+
+def _jnp_inst(inst):
+    return (
+        jnp.asarray(inst.demands, jnp.float32),
+        jnp.asarray(inst.capacities, jnp.float32),
+        jnp.asarray(inst.weights, jnp.float32),
+    )
+
+
+@pytest.mark.parametrize(
+    "crit,pol",
+    [("psdsf", "pooled"), ("rpsdsf", "pooled"), ("drf", "bestfit"), ("tsf", "pooled")],
+)
+def test_deterministic_agreement(crit, pol):
+    inst = paper_example()
+    D, C, phi = _jnp_inst(inst)
+    xj = progressive_fill_jax(
+        D, C, phi, jax.random.key(0), criterion=crit, policy=pol, lookahead=False, tie="low"
+    )
+    xn = progressive_fill(
+        inst, FillConfig(criterion=crit, server_policy=pol, lookahead=False, tie="low"), seed=0
+    ).x
+    np.testing.assert_array_equal(np.asarray(xj), xn)
+
+
+@pytest.mark.parametrize("crit", ["drf", "psdsf"])
+def test_rrr_distributional_agreement(crit):
+    """RRR engines use different RNGs; compare trial means, not trajectories."""
+    inst = paper_example()
+    D, C, phi = _jnp_inst(inst)
+    keys = jax.random.split(jax.random.key(11), 150)
+    xj = np.asarray(
+        fill_trials_jax(D, C, phi, keys, criterion=crit, policy="rrr", lookahead=False, tie="random")
+    )
+    cfg = FillConfig(criterion=crit, server_policy="rrr", lookahead=False, tie="random")
+    xn = np.stack([progressive_fill(inst, cfg, seed=s).x for s in range(150)])
+    np.testing.assert_allclose(xj.mean(0), xn.mean(0), atol=0.8)
+
+
+def test_jax_engine_saturates():
+    inst = make_instance([[2, 1], [1, 3]], [[9, 7], [5, 12], [8, 8]])
+    D, C, phi = _jnp_inst(inst)
+    x = np.asarray(
+        progressive_fill_jax(D, C, phi, jax.random.key(3), criterion="rpsdsf", policy="pooled")
+    )
+    assert not inst.feasible(x).any()
+    assert (inst.residual(x) >= -1e-4).all()
+
+
+def test_jax_engine_warm_start():
+    """x0 warm-start: the engine resumes from an existing allocation (online
+    re-allocation after release events relies on this)."""
+    inst = paper_example()
+    D, C, phi = _jnp_inst(inst)
+    x0 = jnp.array([[5, 0], [0, 5]], jnp.int32)
+    x = np.asarray(
+        progressive_fill_jax(
+            D, C, phi, jax.random.key(0), criterion="rpsdsf", policy="pooled", x0=x0
+        )
+    )
+    assert (x >= np.asarray(x0)).all()  # never takes away granted tasks
+    assert not inst.feasible(x).any()

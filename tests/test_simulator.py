@@ -1,0 +1,122 @@
+"""Tests for the Spark-on-Mesos discrete-event simulator (paper Section 3)."""
+import numpy as np
+import pytest
+
+from repro.core.simulator import (
+    HETEROGENEOUS_AGENTS,
+    HOMOGENEOUS_AGENTS,
+    PI,
+    WC,
+    SimConfig,
+    SparkMesosSim,
+    run_paper_experiment,
+)
+
+
+def _avg(crit, mode, agents=None, n=4, jq=4, **kw):
+    return [
+        run_paper_experiment(crit, mode, agents=agents, jobs_per_queue=jq, seed=s, **kw)
+        for s in range(n)
+    ]
+
+
+def test_all_jobs_complete():
+    r = run_paper_experiment("drf", "characterized", jobs_per_queue=2, seed=0)
+    n_jobs = sum(len(v) for v in r.job_durations.values())
+    assert n_jobs == 2 * 2 * 5  # groups x jobs/queue x queues
+    assert r.makespan > 0
+
+
+def test_timeline_utilization_bounded():
+    r = run_paper_experiment("psdsf", "characterized", jobs_per_queue=2, seed=1)
+    assert (r.timeline[:, 1:] >= -1e-9).all()
+    assert (r.timeline[:, 1:] <= 1.0 + 1e-9).all()
+
+
+def test_characterized_beats_oblivious():
+    """Paper Figures 6-7: the job batch finishes sooner and utilized
+    resources are higher under workload-characterized allocation."""
+    char = _avg("drf", "characterized")
+    obl = _avg("drf", "oblivious")
+    assert np.mean([r.makespan for r in char]) < np.mean([r.makespan for r in obl])
+    assert np.mean([r.mean_used(0) for r in char]) > np.mean([r.mean_used(0) for r in obl])
+
+
+def test_oblivious_has_higher_used_variance():
+    """Paper §3.5.3: variance of utilized resources is larger when oblivious."""
+    char = _avg("drf", "characterized", n=6, jq=6)
+    obl = _avg("drf", "oblivious", n=6, jq=6)
+    assert np.mean([r.used_std(0) for r in obl]) > np.mean([r.used_std(0) for r in char])
+
+
+def test_psdsf_utilizes_heterogeneous_cluster_at_least_as_well():
+    """Paper Figures 3-4: PS-DSF packs heterogeneous servers better."""
+    drf = _avg("drf", "characterized", n=6, jq=6)
+    ps = _avg("psdsf", "characterized", n=6, jq=6)
+    assert (
+        np.mean([r.mean_used(0) for r in ps])
+        >= np.mean([r.mean_used(0) for r in drf]) - 0.005
+    )
+    assert (
+        np.mean([r.makespan for r in ps])
+        <= np.mean([r.makespan for r in drf]) * 1.02
+    )
+
+
+def test_homogeneous_servers_no_difference():
+    """Paper Figure 8: DRF == PS-DSF on a homogeneous cluster."""
+    drf = _avg("drf", "characterized", agents=HOMOGENEOUS_AGENTS, n=3)
+    ps = _avg("psdsf", "characterized", agents=HOMOGENEOUS_AGENTS, n=3)
+    for a, b in zip(drf, ps):
+        assert abs(a.makespan - b.makespan) < 0.05 * a.makespan
+
+
+def test_speculative_execution_mitigates_stragglers():
+    """Paper §3.2: speculation at barriers cuts straggler-dominated jobs."""
+    base = dict(jobs_per_queue=3, straggler_prob=0.12, straggler_factor=12.0)
+    with_spec = [
+        run_paper_experiment("drf", "characterized", seed=s, speculation=True, **base)
+        for s in range(4)
+    ]
+    without = [
+        run_paper_experiment("drf", "characterized", seed=s, speculation=False, **base)
+        for s in range(4)
+    ]
+    assert sum(r.tasks_speculated for r in with_spec) > 0
+    m_with = np.mean([np.mean(r.job_durations["Pi"]) for r in with_spec])
+    m_without = np.mean([np.mean(r.job_durations["Pi"]) for r in without])
+    assert m_with < m_without
+
+
+def test_agent_failure_requeues_and_completes():
+    cfg = SimConfig(criterion="rpsdsf", mode="characterized", jobs_per_queue=2, seed=0)
+    sim = SparkMesosSim(
+        HETEROGENEOUS_AGENTS, {"Pi": PI, "WordCount": WC}, cfg,
+        failures=[(60.0, "type2-0")],
+    )
+    r = sim.run()
+    assert r.tasks_requeued_on_failure >= 0
+    n_jobs = sum(len(v) for v in r.job_durations.values())
+    assert n_jobs == 2 * 2 * 5  # every job still completes after the failure
+
+
+def test_late_agent_registration_is_used():
+    cfg = SimConfig(criterion="drf", mode="characterized", jobs_per_queue=2, seed=0)
+    sim = SparkMesosSim(
+        [("only", (6.0, 11.0))], {"Pi": PI, "WordCount": WC}, cfg,
+        agent_schedule=[(50.0, "late", (8.0, 8.0))],
+    )
+    r = sim.run()
+    sim2 = SparkMesosSim(
+        [("only", (6.0, 11.0))], {"Pi": PI, "WordCount": WC},
+        SimConfig(criterion="drf", mode="characterized", jobs_per_queue=2, seed=0),
+    )
+    r2 = sim2.run()
+    assert r.makespan < r2.makespan  # extra capacity helps
+
+
+def test_deterministic_given_seed():
+    a = run_paper_experiment("psdsf", "characterized", jobs_per_queue=2, seed=7)
+    b = run_paper_experiment("psdsf", "characterized", jobs_per_queue=2, seed=7)
+    assert a.makespan == b.makespan
+    np.testing.assert_array_equal(a.timeline, b.timeline)
