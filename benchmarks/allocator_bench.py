@@ -1,0 +1,116 @@
+"""Scheduler-throughput benchmark: per-grant (legacy) vs batched epoch path.
+
+Measures, per criterion x server-policy at several N (frameworks) x J
+(agents) scales on a synthetic heterogeneous cluster:
+
+  * epoch latency — one Mesos offer cycle (``per_agent_limit=1``), the
+    operation the simulator runs every ``alloc_interval``;
+  * grants/sec within that epoch.
+
+The legacy path recomputes feasibility + scores before every grant
+(O(N*J*R) per grant); the batched path scores once per epoch and applies
+O((N+J)*R) incremental updates per grant (repro.core.engine.BatchedEpoch).
+
+Emits a JSON trajectory document (--out) plus a CSV block on stdout:
+
+    PYTHONPATH=src python -m benchmarks.allocator_bench
+    PYTHONPATH=src python -m benchmarks.allocator_bench --big --reps 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.online import OnlineAllocator
+
+# demand/capacity values are multiples of 1/4 so every arithmetic path
+# (rebuild vs incremental) is binary-exact
+_AGENT_TYPES = [(16.0, 64.0), (32.0, 32.0), (24.0, 48.0), (64.0, 128.0)]
+
+
+def _build(N: int, J: int, criterion: str, policy: str, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    al = OnlineAllocator(2, criterion=criterion, server_policy=policy,
+                        mode="characterized", seed=seed)
+    for j in range(J):
+        al.add_agent(f"a{j:04d}", _AGENT_TYPES[j % len(_AGENT_TYPES)])
+    for n in range(N):
+        d = (float(rng.integers(2, 9)) / 2.0, float(rng.integers(2, 17)) / 2.0)
+        al.register(f"f{n:04d}", demand=d, wanted_tasks=int(rng.integers(4, 32)))
+    return al
+
+
+def _bench_epoch(N, J, criterion, policy, path: str, reps: int, seed: int = 0):
+    """Median epoch latency (s) + grants for one offer cycle per agent."""
+    times, n_grants = [], 0
+    for r in range(reps):
+        al = _build(N, J, criterion, policy, seed=seed)
+        t0 = time.perf_counter()
+        grants = al.allocate(per_agent_limit=1, batched=(path == "batched"))
+        times.append(time.perf_counter() - t0)
+        n_grants = len(grants)
+    t = float(np.median(times))
+    return {
+        "criterion": criterion, "policy": policy, "path": path,
+        "n_frameworks": N, "n_agents": J,
+        "epoch_s": t, "grants": n_grants,
+        "grants_per_s": (n_grants / t) if t > 0 else float("inf"),
+    }
+
+
+def run(sizes=((50, 25), (200, 100)), criteria=("drf", "tsf", "psdsf", "rpsdsf"),
+        policies=("rrr", "pooled", "bestfit"), reps: int = 3,
+        out: str | None = None, print_csv: bool = True):
+    rows = []
+    for (N, J) in sizes:
+        for crit in criteria:
+            for pol in policies:
+                for path in ("pergrant", "batched"):
+                    rows.append(_bench_epoch(N, J, crit, pol, path, reps))
+    speedups = {}
+    for (N, J) in sizes:
+        for crit in criteria:
+            for pol in policies:
+                pair = {r["path"]: r for r in rows
+                        if (r["n_frameworks"], r["n_agents"]) == (N, J)
+                        and r["criterion"] == crit and r["policy"] == pol}
+                speedups[f"{crit}/{pol}/N{N}xJ{J}"] = (
+                    pair["pergrant"]["epoch_s"] / max(pair["batched"]["epoch_s"], 1e-12)
+                )
+    doc = {"bench": "allocator_epoch", "results": rows,
+           "epoch_speedup_batched_over_pergrant": speedups}
+    if print_csv:
+        print("criterion,policy,path,N,J,epoch_ms,grants,grants_per_s")
+        for r in rows:
+            print(f"{r['criterion']},{r['policy']},{r['path']},"
+                  f"{r['n_frameworks']},{r['n_agents']},"
+                  f"{r['epoch_s'] * 1e3:.2f},{r['grants']},{r['grants_per_s']:.0f}")
+        print("# epoch speedup (batched over per-grant):")
+        for k, v in speedups.items():
+            print(f"#   {k}: {v:.1f}x")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+        if print_csv:
+            print(f"# wrote {out}")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--big", action="store_true",
+                    help="add a 1000x400 fleet-scale point")
+    ap.add_argument("--out", default="artifacts/bench/allocator_bench.json")
+    args = ap.parse_args()
+    sizes = [(50, 25), (200, 100)] + ([(1000, 400)] if args.big else [])
+    run(sizes=tuple(sizes), reps=args.reps, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -63,14 +63,21 @@ def demand_from_dryrun(artifact_path: str, gang_chips: int = 16) -> tuple:
 
 
 class GangScheduler:
-    """Online fair gang scheduler over a dynamic slice fleet."""
+    """Online fair gang scheduler over a dynamic slice fleet.
 
-    def __init__(self, criterion: str = "rpsdsf", server_policy: str = "rrr",
-                 mode: str = "characterized", seed: int = 0):
+    ``criterion`` may be a name or a :class:`repro.core.criteria.Criterion`
+    strategy object.  ``batched=True`` runs epochs through the incremental
+    :class:`repro.core.engine.BatchedEpoch` engine (score once per epoch, the
+    fleet-scale fast path) instead of the legacy per-grant recompute."""
+
+    def __init__(self, criterion="rpsdsf", server_policy: str = "rrr",
+                 mode: str = "characterized", seed: int = 0,
+                 batched: bool = False):
         self.alloc = OnlineAllocator(
             n_resources=len(RESOURCES), criterion=criterion,
             server_policy=server_policy, mode=mode, seed=seed,
         )
+        self.batched = batched
         self.jobs: dict[str, JobSpec] = {}
         self.slice_types: dict[str, str] = {}
         self.alloc.framework_demand_oracle = lambda fid: np.asarray(
@@ -104,7 +111,8 @@ class GangScheduler:
     def schedule(self) -> list:
         """Run one allocation epoch -> [(job, slice, gang_units)]."""
         return [
-            (g.fid, g.agent, g.n_executors) for g in self.alloc.allocate()
+            (g.fid, g.agent, g.n_executors)
+            for g in self.alloc.allocate(batched=self.batched)
         ]
 
     def placement(self, name: str) -> dict:

@@ -1,147 +1,43 @@
-"""Fair-allocation criteria: DRF(H), TSF, PS-DSF, rPS-DSF, best-fit metrics.
+"""Compatibility shim — the criterion formulas live in
+:mod:`repro.core.criteria` (the single shared scoring module used by the
+numpy reference filler, the online allocator, and the JAX fleet engine).
 
-All criteria are expressed as *scores to be minimized* by progressive filling:
-the framework (or framework x server pair) with the smallest score receives the
-next task.  Functions are written against the numpy/jnp array API so the same
-code backs both the exact reference engine (numpy) and the vectorized
-fleet-scale engine (jax.numpy) — pass ``xp=numpy`` or ``xp=jax.numpy``.
-
-Notation (matching the paper):
-  D   (N, R)  per-task demands d_{n,r}
-  C   (J, R)  server capacities c_{j,r}
-  phi (N,)    framework weights (priorities)
-  X   (N, J)  current integer allocation x_{n,j};  x_n = sum_j X[n, j]
-
-Criteria:
-  * DRF / DRFH  [Ghodsi+ NSDI'11; Wang+ TPDS'15]:
-      s_n = x_n * max_r d_{n,r} / (phi_n * sum_j c_{j,r})
-    (global dominant share over pooled cluster capacity — server-oblivious).
-  * TSF  [Wang+ SC'16]:
-      s_n = x_n / (phi_n * M_n),  M_n = sum_j min_r c_{j,r} / d_{n,r}
-    (task share relative to the framework's fluid monopoly allocation).
-  * PS-DSF  [Khamse-Ashari+ ICC'17] — per-server virtual dominant share:
-      K_{n,j} = x_n * max_r d_{n,r} / (phi_n * c_{j,r})
-  * rPS-DSF (this paper's novel criterion) — PS-DSF against *residual*
-    capacities under the current allocation:
-      K~_{n,j} = x_n * max_r d_{n,r} / (phi_n * (c_{j,r} - sum_n' x_{n',j} d_{n',r}))
-
-``lookahead=True`` scores the hypothetical allocation after granting one more
-task (x_n + 1); this is how a progressive filler breaks the all-zeros start and
-is one of the calibration knobs for reproducing the paper's exact tables.
+Import from here only for backwards compatibility; new code should use
+``repro.core.criteria`` directly (including the pluggable ``Criterion``
+strategy objects and ``get_criterion``).
 """
 from __future__ import annotations
 
-import numpy as _np
+from repro.core.criteria import (  # noqa: F401
+    CRITERIA,
+    Criterion,
+    bestfit_scores,
+    criterion_scores,
+    drf_dominant,
+    drf_scores,
+    get_criterion,
+    is_server_specific,
+    psdsf_scores,
+    residual_capacities,
+    tsf_monopoly,
+    tsf_scores,
+    usage_dominant_share,
+    virtual_dominant,
+)
 
-_BIG = 1e18
-
-
-def _totals(X, xp):
-    return xp.sum(X, axis=1)  # (N,)
-
-
-def drf_scores(X, D, C, phi, *, lookahead: bool = True, xp=_np):
-    """(N,) global dominant shares (to minimize)."""
-    x = _totals(X, xp) + (1.0 if lookahead else 0.0)
-    ctot = xp.sum(C, axis=0)  # (R,)
-    dom = xp.max(D / xp.maximum(ctot[None, :], 1e-30), axis=1)  # (N,)
-    return x * dom / phi
-
-
-def tsf_scores(X, D, C, phi, *, lookahead: bool = True, xp=_np, allowed=None):
-    """(N,) task shares relative to fluid monopoly allocation (to minimize).
-
-    With placement constraints (allowed (N, J)), the monopoly allocation only
-    counts each framework's ALLOWED servers — this normalization is the core
-    of TSF's sharing-incentive guarantee under constraints (Wang+ SC'16)."""
-    x = _totals(X, xp) + (1.0 if lookahead else 0.0)
-    # M[n] = sum_{j allowed} min_r C[j,r] / D[n,r]
-    ratio = C[None, :, :] / xp.maximum(D[:, None, :], 1e-30)  # (N, J, R)
-    per_server = xp.min(ratio, axis=2)                        # (N, J)
-    if allowed is not None:
-        per_server = xp.where(allowed, per_server, 0.0)
-    monopoly = xp.sum(per_server, axis=1)  # (N,)
-    return x / (phi * xp.maximum(monopoly, 1e-30))
-
-
-def psdsf_scores(X, D, C, phi, *, residual: bool = False, lookahead: bool = True, xp=_np):
-    """(N, J) per-server virtual dominant shares K_{n,j} (to minimize).
-
-    residual=True gives rPS-DSF (the paper's Eq. for K~): capacities are the
-    *current residual* c_{j,r} - sum_n x_{n,j} d_{n,r}.  Non-positive residual
-    resources make a server unusable for any framework demanding them: the
-    score becomes +inf there (feasibility masks catch this anyway).
-    """
-    x = _totals(X, xp) + (1.0 if lookahead else 0.0)  # (N,)
-    if residual:
-        used = xp.einsum("nj,nr->jr", X * 1.0, D)
-        cap = C - used  # (J, R)
-    else:
-        cap = C
-    # share[n, j] = max_r D[n, r] / cap[j, r]   (inf where cap <= 0 and D > 0)
-    safe = xp.where(cap > 1e-12, cap, 1e-30)[None, :, :]  # (1, J, R)
-    frac = D[:, None, :] / safe  # (N, J, R)
-    frac = xp.where((cap[None, :, :] <= 1e-12) & (D[:, None, :] > 0), _BIG, frac)
-    dom = xp.max(frac, axis=2)  # (N, J)
-    return (x / phi)[:, None] * dom
-
-
-# ---------------------------------------------------------------------------
-# Best-fit server metrics (used by BF-DRF: framework chosen by DRF, then the
-# server "whose residual capacity most closely matches the demand vector").
-# All metrics are scores to MINIMIZE over feasible servers.
-# ---------------------------------------------------------------------------
-
-def bestfit_scores(res, d, *, metric: str = "cosine", xp=_np):
-    """(J,) best-fit score of placing one task with demand d on residual res.
-
-    res: (J, R) residual capacities;  d: (R,) demand vector.
-
-    metrics:
-      cosine : 1 - cos(res_j, d)            — directional match (alignment).
-      align  : -<res_j/|res_j|_1, d/|d|_1>  — L1-normalized alignment.
-      tasks  : -min_r res_{j,r}/d_r         — prefer the server that can host
-                                              the MOST further tasks of n
-                                              (worst-fit by count; greedy-pack).
-      tight  : +min_r res_{j,r}/d_r         — classical best-fit (tightest).
-      slack  : max_r (res_{j,r} - d_r)/c???  — not capacity-normalized; we use
-               max_r (res_{j,r} - d_r)/max(res_{j,r},eps): leftover dominance.
-    """
-    res = xp.asarray(res, dtype=xp.float64) if xp is _np else res
-    eps = 1e-30
-    if metric == "cosine":
-        num = xp.sum(res * d[None, :], axis=1)
-        den = xp.sqrt(xp.sum(res * res, axis=1) * xp.sum(d * d)) + eps
-        return 1.0 - num / den
-    if metric == "align":
-        rn = res / (xp.sum(xp.abs(res), axis=1, keepdims=True) + eps)
-        dn = d / (xp.sum(xp.abs(d)) + eps)
-        return -xp.sum(rn * dn[None, :], axis=1)
-    if metric == "tasks":
-        return -xp.min(res / xp.maximum(d[None, :], eps), axis=1)
-    if metric == "tight":
-        return xp.min(res / xp.maximum(d[None, :], eps), axis=1)
-    if metric == "slack":
-        return xp.max((res - d[None, :]) / xp.maximum(res, eps), axis=1)
-    raise ValueError(f"unknown best-fit metric {metric!r}")
-
-
-CRITERIA = ("drf", "tsf", "psdsf", "rpsdsf")
-
-
-def criterion_scores(name, X, D, C, phi, *, lookahead=True, xp=_np, allowed=None):
-    """Uniform entry point.  Returns (N,) for global criteria, (N, J) for
-    server-specific ones."""
-    if name == "drf":
-        return drf_scores(X, D, C, phi, lookahead=lookahead, xp=xp)
-    if name == "tsf":
-        return tsf_scores(X, D, C, phi, lookahead=lookahead, xp=xp, allowed=allowed)
-    if name == "psdsf":
-        return psdsf_scores(X, D, C, phi, residual=False, lookahead=lookahead, xp=xp)
-    if name == "rpsdsf":
-        return psdsf_scores(X, D, C, phi, residual=True, lookahead=lookahead, xp=xp)
-    raise ValueError(f"unknown criterion {name!r}")
-
-
-def is_server_specific(name: str) -> bool:
-    return name in ("psdsf", "rpsdsf")
+__all__ = [
+    "CRITERIA",
+    "Criterion",
+    "bestfit_scores",
+    "criterion_scores",
+    "drf_dominant",
+    "drf_scores",
+    "get_criterion",
+    "is_server_specific",
+    "psdsf_scores",
+    "residual_capacities",
+    "tsf_monopoly",
+    "tsf_scores",
+    "usage_dominant_share",
+    "virtual_dominant",
+]

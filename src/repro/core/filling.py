@@ -6,21 +6,12 @@ configured fairness criterion + server-selection policy, until no task fits
 anywhere ("at least one resource is exhausted in every server" up to integer
 granularity).
 
-Server-selection policies:
-  * ``rrr``     Randomized Round-Robin (Mesos default): servers take turns in a
-                random order, re-permuted each round; the visited server picks
-                the feasible framework with minimum criterion score.
-  * ``pooled``  All feasible (framework, server) pairs compete jointly.  For
-                server-specific criteria (PS-DSF / rPS-DSF) the pair with the
-                minimum K_{n,j} wins; for global criteria the framework with
-                the minimum score wins and the server is chosen by tie-break.
-  * ``bestfit`` The framework is chosen first by the (global) criterion; the
-                server is then chosen by a best-fit metric over residual
-                capacities (this is BF-DRF when criterion="drf").
-
-The engine is numpy-exact and deliberately simple; the vectorized fleet-scale
-engine lives in :mod:`repro.core.filling_jax` and is agreement-tested against
-this one.
+Criterion scoring and server selection are NOT implemented here: they come
+from the shared strategy modules :mod:`repro.core.criteria` and
+:mod:`repro.core.policies`, the same objects driving the online allocator's
+batched epoch engine and (for scores) the JAX fleet engine.  This file is
+just the exact numpy driver: full score recompute every grant, no caching —
+the oracle the fast engines are agreement-tested against.
 """
 from __future__ import annotations
 
@@ -29,8 +20,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import fairness
+from repro.core import criteria
 from repro.core.instance import Instance
+from repro.core.policies import make_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,29 +47,6 @@ class FillResult:
         return self.x.sum(axis=1)
 
 
-def _tiebreak(idxs: np.ndarray, tie: str, rng: Optional[np.random.Generator]):
-    if len(idxs) == 1:
-        return int(idxs[0])
-    if tie == "low":
-        return int(idxs[0])
-    if tie == "high":
-        return int(idxs[-1])
-    if tie == "random":
-        assert rng is not None, "random tie-break needs an rng"
-        return int(rng.choice(idxs))
-    raise ValueError(f"unknown tie rule {tie!r}")
-
-
-def _argmin_masked(scores: np.ndarray, mask: np.ndarray, tie: str, rng) -> Optional[int]:
-    """Index of the min score among mask=True entries (flat), or None."""
-    if not mask.any():
-        return None
-    s = np.where(mask, scores, np.inf)
-    m = s.min()
-    idxs = np.flatnonzero(np.isclose(s, m, rtol=0, atol=1e-12))
-    return _tiebreak(idxs, tie, rng)
-
-
 def progressive_fill(
     inst: Instance,
     cfg: FillConfig,
@@ -96,71 +65,24 @@ def progressive_fill(
     if needs_rng and rng is None:
         rng = np.random.default_rng(0)
 
-    # RRR state: a permutation of servers, advanced one per grant opportunity.
-    perm = rng.permutation(J) if cfg.server_policy == "rrr" else None
-    pos = 0
+    crit = criteria.get_criterion(cfg.criterion)
+    policy = make_policy(cfg.server_policy, J, rng, cfg.tie, cfg.bf_metric)
 
     for step in range(cfg.max_steps):
         feas = inst.feasible(X)  # (N, J) bool
         if not feas.any():
             return FillResult(X, inst.residual(X), step, order)
 
-        scores = fairness.criterion_scores(
-            cfg.criterion, X, D, C, phi, lookahead=cfg.lookahead,
-            allowed=inst.allowed,
+        scores = crit.scores(
+            X, D, C, phi, lookahead=cfg.lookahead, allowed=inst.allowed,
         )
-        server_specific = fairness.is_server_specific(cfg.criterion)
-
-        if cfg.server_policy == "rrr":
-            # Visit servers round-robin; skip servers where nothing fits.
-            # Up to 2*J visits: the remainder of the current round plus one
-            # full fresh round is guaranteed to reach a feasible server
-            # (re-permuting mid-round can revisit servers, so J alone is not).
-            granted = False
-            for _ in range(2 * J):
-                j = int(perm[pos])
-                pos += 1
-                if pos == J:
-                    perm = rng.permutation(J)
-                    pos = 0
-                col = feas[:, j]
-                if not col.any():
-                    continue
-                s = scores[:, j] if server_specific else scores
-                n = _argmin_masked(s, col, cfg.tie, rng)
-                X[n, j] += 1
-                order.append((n, j))
-                granted = True
-                break
-            if not granted:  # unreachable: 2*J visits cover every server
-                raise AssertionError("RRR failed to reach a feasible server")
-
-        elif cfg.server_policy == "pooled":
-            if server_specific:
-                flat = _argmin_masked(scores.ravel(), feas.ravel(), cfg.tie, rng)
-                n, j = divmod(flat, J)
-            else:
-                n = _argmin_masked(scores, feas.any(axis=1), cfg.tie, rng)
-                j = _tiebreak(np.flatnonzero(feas[n]), cfg.tie, rng)
-            X[n, j] += 1
-            order.append((n, j))
-
-        elif cfg.server_policy == "bestfit":
-            if server_specific:
-                # best-fit after a server-specific criterion: pick the
-                # framework by its best (min over feasible servers) score.
-                per_fw = np.where(feas, scores, np.inf).min(axis=1)
-                n = _argmin_masked(per_fw, feas.any(axis=1), cfg.tie, rng)
-            else:
-                n = _argmin_masked(scores, feas.any(axis=1), cfg.tie, rng)
-            res = inst.residual(X)
-            bf = fairness.bestfit_scores(res, D[n], metric=cfg.bf_metric)
-            j = _argmin_masked(bf, feas[n], cfg.tie, rng)
-            X[n, j] += 1
-            order.append((n, j))
-
-        else:
-            raise ValueError(f"unknown server policy {cfg.server_policy!r}")
+        res = inst.residual(X) if cfg.server_policy == "bestfit" else None
+        n, j = policy.select(
+            scores, feas, server_specific=crit.server_specific,
+            demands=D, residual=res,
+        )
+        X[n, j] += 1
+        order.append((n, j))
 
     raise RuntimeError("progressive_fill did not terminate within max_steps")
 

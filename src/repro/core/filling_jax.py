@@ -7,6 +7,11 @@ fleet-scale cluster layer, where N (jobs) x J (pod slices) is large enough
 that scoring is a real compute kernel (see ``repro.kernels.psdsf_score`` for
 the fused Pallas version of the inner score/argmin).
 
+Criterion scores come from :mod:`repro.core.criteria` with ``xp=jax.numpy``
+— the SAME formulas the numpy reference and the online allocator use; this
+module owns only the lax control flow (while-loop, RRR permutation state,
+masked argmin).
+
 Semantics match the reference engine:
   * one task granted per step;
   * RRR: servers visited in a per-round random permutation; the visited server
@@ -26,11 +31,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-CRIT_DRF, CRIT_TSF, CRIT_PSDSF, CRIT_RPSDSF = 0, 1, 2, 3
+from repro.core import criteria
+
 POL_RRR, POL_POOLED, POL_BESTFIT = 0, 1, 2
-_CRIT = {"drf": CRIT_DRF, "tsf": CRIT_TSF, "psdsf": CRIT_PSDSF, "rpsdsf": CRIT_RPSDSF}
 _POL = {"rrr": POL_RRR, "pooled": POL_POOLED, "bestfit": POL_BESTFIT}
-_BIG = jnp.float32(1e18)
 
 
 class FillState(NamedTuple):
@@ -41,42 +45,12 @@ class FillState(NamedTuple):
     steps: jax.Array    # () int32
 
 
-def _residual(x, D, C):
-    used = jnp.einsum("nj,nr->jr", x.astype(jnp.float32), D)
-    return C - used
-
-
-def _feasible(x, D, C):
-    res = _residual(x, D, C)
-    return jnp.all(D[:, None, :] <= res[None, :, :] + 1e-6, axis=-1)  # (N, J)
-
-
-def _scores(crit: int, x, D, C, phi, lookahead: bool):
-    """(N, J) scores (global criteria are broadcast along J)."""
-    xt = jnp.sum(x, axis=1).astype(jnp.float32) + (1.0 if lookahead else 0.0)
-    if crit == CRIT_DRF:
-        dom = jnp.max(D / jnp.maximum(jnp.sum(C, axis=0)[None, :], 1e-30), axis=1)
-        s = xt * dom / phi
-        return jnp.broadcast_to(s[:, None], (D.shape[0], C.shape[0]))
-    if crit == CRIT_TSF:
-        ratio = C[None, :, :] / jnp.maximum(D[:, None, :], 1e-30)
-        monopoly = jnp.sum(jnp.min(ratio, axis=2), axis=1)
-        s = xt / (phi * jnp.maximum(monopoly, 1e-30))
-        return jnp.broadcast_to(s[:, None], (D.shape[0], C.shape[0]))
-    # PS-DSF / rPS-DSF
-    cap = _residual(x, D, C) if crit == CRIT_RPSDSF else C
-    safe = jnp.where(cap > 1e-12, cap, 1e-30)[None, :, :]
-    frac = D[:, None, :] / safe
-    frac = jnp.where((cap[None, :, :] <= 1e-12) & (D[:, None, :] > 0), _BIG, frac)
-    dom = jnp.max(frac, axis=2)
-    return (xt / phi)[:, None] * dom
-
-
-def _bestfit(res, d):
-    """(J,) cosine best-fit score (lower = better aligned)."""
-    num = jnp.sum(res * d[None, :], axis=1)
-    den = jnp.sqrt(jnp.sum(res * res, axis=1) * jnp.sum(d * d)) + 1e-30
-    return 1.0 - num / den
+def _feasible(x, D, C, allowed):
+    res = criteria.residual_capacities(x.astype(jnp.float32), D, C, xp=jnp)
+    feas = jnp.all(D[:, None, :] <= res[None, :, :] + 1e-6, axis=-1)  # (N, J)
+    if allowed is not None:
+        feas = feas & allowed
+    return feas
 
 
 def _masked_argmin(scores, mask, key, random_tie: bool):
@@ -105,14 +79,18 @@ def progressive_fill_jax(
     tie: str = "low",
     max_steps: int = 4096,
     x0: jax.Array | None = None,
+    allowed: jax.Array | None = None,   # (N, J) bool placement constraints
 ) -> jax.Array:
     """Run progressive filling; returns the (N, J) int32 allocation."""
-    crit, pol = _CRIT[criterion], _POL[policy]
+    crit = criteria.get_criterion(criterion)
+    pol = _POL[policy]
     random_tie = tie == "random"
     N, J = D.shape[0], C.shape[0]
     D = D.astype(jnp.float32)
     C = C.astype(jnp.float32)
     phi = phi.astype(jnp.float32)
+    if allowed is not None:
+        allowed = jnp.asarray(allowed, bool)
 
     x_init = jnp.zeros((N, J), jnp.int32) if x0 is None else x0.astype(jnp.int32)
     key, pk = jax.random.split(key)
@@ -125,12 +103,14 @@ def progressive_fill_jax(
     )
 
     def cond(st: FillState):
-        return jnp.any(_feasible(st.x, D, C)) & (st.steps < max_steps)
+        return jnp.any(_feasible(st.x, D, C, allowed)) & (st.steps < max_steps)
 
     def body(st: FillState):
-        feas = _feasible(st.x, D, C)
-        sc = _scores(crit, st.x, D, C, phi, lookahead)
-        key, k1, k2, k3 = jax.random.split(st.key, 4)
+        feas = _feasible(st.x, D, C, allowed)
+        sc = crit.matrix_scores(
+            st.x, D, C, phi, lookahead=lookahead, xp=jnp, allowed=allowed
+        )
+        key, k1, k2, k3, k4 = jax.random.split(st.key, 5)
 
         if pol == POL_RRR:
             # rank of each server within the current round
@@ -148,13 +128,15 @@ def progressive_fill_jax(
             pos = eff_rank[j] + 1
             pos = jnp.where(pos >= J, 0, pos)
             # if we wrapped past the end, next round needs a fresh perm too;
-            # approximate by re-permuting whenever pos returns to 0
+            # approximate by re-permuting whenever pos returns to 0 (with its
+            # OWN key: k1 already produced new_perm, so reusing it here would
+            # replay the same server order on consecutive rounds)
             perm = jnp.where(use_wrap, new_perm, st.perm)
-            perm = jnp.where(pos == 0, jax.random.permutation(k1, J), perm)
+            perm = jnp.where(pos == 0, jax.random.permutation(k4, J), perm)
             return FillState(st.x.at[n, j].add(1), key, perm, pos, st.steps + 1)
 
         if pol == POL_POOLED:
-            if crit in (CRIT_PSDSF, CRIT_RPSDSF):
+            if crit.server_specific:
                 flat = _masked_argmin(sc.ravel(), feas.ravel(), k2, random_tie)
                 n, j = flat // J, flat % J
             else:
@@ -165,8 +147,8 @@ def progressive_fill_jax(
         # POL_BESTFIT
         per_fw = jnp.min(jnp.where(feas, sc, jnp.inf), axis=1)
         n = _masked_argmin(per_fw, jnp.any(feas, axis=1), k2, random_tie)
-        res = _residual(st.x, D, C)
-        bf = _bestfit(res, D[n])
+        res = criteria.residual_capacities(st.x.astype(jnp.float32), D, C, xp=jnp)
+        bf = criteria.bestfit_scores(res, D[n], metric="cosine", xp=jnp)
         j = _masked_argmin(bf, feas[n], k3, False)
         return FillState(st.x.at[n, j].add(1), key, st.perm, st.pos, st.steps + 1)
 

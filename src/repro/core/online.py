@@ -1,7 +1,7 @@
 """Online (Mesos-style) fair allocator.
 
-Implements the paper's Section 3 allocator semantics on top of the fairness
-criteria of :mod:`repro.core.fairness`:
+Implements the paper's Section 3 allocator semantics on top of the shared
+criterion module :mod:`repro.core.criteria`:
 
   * **workload-characterized ("fine-grained")** — each framework declares its
     per-task demand vector d_n; every allocation epoch hands out single-task
@@ -20,10 +20,18 @@ Shared semantics (paper §3.1):
   * agents can register/deregister dynamically (the paper's §3.7 one-by-one
     registration; our fault-tolerance churn).
 
-This module is deliberately backend-agnostic pure Python/numpy — it is the
-*control plane*. The fleet-scale data plane (thousands of jobs x slices) uses
-:mod:`repro.core.filling_jax` / the ``psdsf_score`` Pallas kernel for the
-scoring inner loop.
+State lives in an incremental :class:`repro.core.cluster_state.ClusterState`
+(struct-of-arrays with stable slots, updated in O(R) per grant/release) —
+the allocator never rebuilds matrices from Python dicts.  Two epoch paths:
+
+  * ``allocate()`` — the legacy-compatible per-grant path: feasibility and
+    scores are fully recomputed before every grant, reproducing the historic
+    grant sequences bit-for-bit (golden-tested);
+  * ``allocate(batched=True)`` — the fast path: one
+    :class:`repro.core.engine.BatchedEpoch` computes scores/feasibility once
+    per epoch and keeps them consistent with O((N+J)*R) incremental updates
+    per grant, selecting through the same :mod:`repro.core.policies` strategy
+    objects as the exact reference filler (parity-tested against it).
 """
 from __future__ import annotations
 
@@ -32,7 +40,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import fairness
+from repro.core import criteria
+from repro.core.cluster_state import ClusterState
+from repro.core.engine import BatchedEpoch
 
 
 @dataclasses.dataclass
@@ -72,7 +82,7 @@ class OnlineAllocator:
     def __init__(
         self,
         n_resources: int,
-        criterion: str = "drf",
+        criterion="drf",                 # name or criteria.Criterion
         server_policy: str = "rrr",
         mode: str = "characterized",     # characterized | oblivious
         bf_metric: str = "cosine",
@@ -80,25 +90,45 @@ class OnlineAllocator:
     ):
         if mode not in ("characterized", "oblivious"):
             raise ValueError(mode)
+        if server_policy not in ("rrr", "pooled", "bestfit"):
+            raise ValueError(f"unknown server policy {server_policy!r}")
         self.R = n_resources
-        self.criterion = criterion
+        self.crit = criteria.get_criterion(criterion)
+        self.criterion = self.crit.name
         self.server_policy = server_policy
         self.mode = mode
         self.bf_metric = bf_metric
         self.rng = np.random.default_rng(seed)
-        self.agents: dict[str, np.ndarray] = {}        # agent -> capacity (R,)
-        self.free: dict[str, np.ndarray] = {}          # agent -> free (R,)
+        self.state = ClusterState(n_resources)
         self.frameworks: dict[str, FrameworkState] = {}
+
+    # -- dict-style views (read-only; canonical data is in self.state) -------
+
+    @property
+    def agents(self) -> dict:
+        """agent -> capacity (R,), in registration order.  Copies: the
+        canonical arrays live in ClusterState and may be reallocated on
+        growth, so handing out views would silently go stale."""
+        return {a: self.state.C[j].copy()
+                for a, j in self.state.agent2slot.items()}
+
+    @property
+    def free(self) -> dict:
+        """agent -> free resources (R,), in registration order (copies)."""
+        return {a: self.state.FREE[j].copy()
+                for a, j in self.state.agent2slot.items()}
 
     # -- membership ---------------------------------------------------------
 
     def add_agent(self, name: str, capacity) -> None:
-        cap = np.asarray(capacity, np.float64)
-        self.agents[name] = cap
-        self.free[name] = cap.copy()
+        self.state.add_agent(name, capacity)
 
     def remove_agent(self, name: str) -> list[tuple[str, int]]:
-        """Remove an agent (failure). Returns [(fid, n_executors_lost)]."""
+        """Remove an agent (failure). Returns [(fid, n_executors_lost)].
+
+        Frameworks that only held coarse-offer slack on the failed agent are
+        reported too (with 0 executors lost) so callers can reconcile their
+        usage accounting."""
         lost = []
         for fw in self.frameworks.values():
             bundles = fw.tasks.pop(name, [])
@@ -107,9 +137,11 @@ class OnlineAllocator:
                 fw.usage -= s
             if bundles:
                 fw.usage -= np.sum(bundles, axis=0)
+            if bundles or s is not None:
                 lost.append((fw.fid, len(bundles)))
-        self.agents.pop(name)
-        self.free.pop(name)
+        self.state.remove_agent(name)
+        for fid, _n in lost:
+            self._sync_demand(fid)
         return lost
 
     def register(self, fid: str, demand=None, wanted_tasks: int = 1,
@@ -122,25 +154,35 @@ class OnlineAllocator:
             usage=np.zeros(self.R), tasks={}, phi=float(phi),
             allowed_agents=None if allowed_agents is None else set(allowed_agents),
         )
+        if fid in self.state.fid2slot:  # re-registration replaces the slot
+            self.state.remove_framework(fid)
+        self.state.add_framework(fid, demand=d, phi=phi,
+                                 allowed_agents=allowed_agents,
+                                 wanted=wanted_tasks)
 
     def deregister(self, fid: str) -> None:
         fw = self.frameworks.pop(fid)
         for agent, bundles in fw.tasks.items():
-            if agent in self.free:
-                self.free[agent] += np.sum(bundles, axis=0)
+            j = self.state.agent2slot.get(agent)
+            if j is not None:
+                self.state.FREE[j] += np.sum(bundles, axis=0)
         for agent, s in fw.slack.items():
-            if agent in self.free:
-                self.free[agent] += s
+            j = self.state.agent2slot.get(agent)
+            if j is not None:
+                self.state.FREE[j] += s
+        self.state.remove_framework(fid)
 
     def release_executor(self, fid: str, agent: str) -> None:
         fw = self.frameworks[fid]
         bundle = fw.tasks[agent].pop()
         fw.usage -= bundle
-        if agent in self.free:
-            self.free[agent] += bundle
+        if agent in self.state.agent2slot:
+            self.state.release(fid, agent, bundle)
+        self._sync_demand(fid)
 
     def set_wanted(self, fid: str, wanted_tasks: int) -> None:
         self.frameworks[fid].wanted_tasks = wanted_tasks
+        self.state.set_wanted(fid, wanted_tasks)
 
     def force_place(self, fid: str, agent: str, n_executors: int = 1) -> None:
         """Place executors bypassing the criterion (constructing an initial
@@ -148,56 +190,56 @@ class OnlineAllocator:
         fw = self.frameworks[fid]
         d = self._true_demand(fid)
         bundle = d * n_executors
-        if (self.free[agent] - bundle < -1e-9).any():
+        j = self.state.agent2slot[agent]
+        if (self.state.FREE[j] - bundle < -1e-9).any():
             raise ValueError(f"agent {agent} cannot hold {n_executors} executors of {fid}")
-        self.free[agent] = self.free[agent] - bundle
+        self.state.grant(fid, agent, bundle, n_executors)
         fw.tasks.setdefault(agent, []).extend([d.copy()] * n_executors)
         fw.usage = fw.usage + bundle
+        self._sync_demand(fid)
 
     # -- scoring ------------------------------------------------------------
 
-    def _matrices(self):
-        fids = sorted(self.frameworks)
-        ags = sorted(self.agents)
-        X = np.array(
-            [[len(self.frameworks[f].tasks.get(a, [])) for a in ags] for f in fids],
-            np.float64,
-        )
-        C = np.array([self.agents[a] for a in ags])
-        FREE = np.array([self.free[a] for a in ags])
-        D = np.zeros((len(fids), self.R))
-        for i, f in enumerate(fids):
-            d = self.frameworks[f].inferred_demand()
-            D[i] = d if d is not None else 0.0
-        phi = np.array([self.frameworks[f].phi for f in fids])
-        return fids, ags, X, D, C, FREE, phi
+    def _sync_demand(self, fid: str) -> None:
+        """Mirror the (possibly inferred) scoring demand into ClusterState."""
+        fw = self.frameworks.get(fid)
+        if fw is None or fid not in self.state.fid2slot:
+            return
+        if fw.demand is None:  # oblivious: inferred demand drifts with usage
+            self.state.set_demand(fid, fw.inferred_demand())
 
-    def _framework_scores(self, X, D, C, phi):
+    def _framework_scores(self, view):
         """(N, A) scores; oblivious DRF/TSF score on aggregate usage."""
-        name = self.criterion
+        name = self.crit.name
         if name in ("drf", "tsf"):
             if self.mode == "oblivious":
-                fids = sorted(self.frameworks)
-                usage = np.array([self.frameworks[f].usage for f in fids])
-                ctot = np.maximum(C.sum(axis=0), 1e-30)
-                s = (usage / ctot).max(axis=1) / phi
+                usage = np.array([self.frameworks[f].usage for f in view.fids])
+                s = criteria.usage_dominant_share(usage, view.C, view.phi)
             else:
-                s = fairness.criterion_scores(name, X, D, C, phi, lookahead=False)
-            return np.broadcast_to(s[:, None], (len(s), C.shape[0]))
-        return fairness.criterion_scores(
-            name, X, D, C, phi, lookahead=False
+                s = self.crit.scores(view.X, view.D, view.C, view.phi,
+                                     lookahead=False)
+            return np.broadcast_to(s[:, None], (len(s), view.C.shape[0]))
+        return self.crit.scores(
+            view.X, view.D, view.C, view.phi, lookahead=False
         )  # psdsf / rpsdsf -> (N, A)
 
     # -- allocation epoch ----------------------------------------------------
 
-    def allocate(self, per_agent_limit: Optional[int] = None) -> list[Grant]:
+    def allocate(self, per_agent_limit: Optional[int] = None,
+                 batched: bool = False) -> list[Grant]:
         """Run one allocation epoch; returns grants.
 
         per_agent_limit models Mesos's offer cycle: each agent's resources are
         offered at most that many times per cycle (1 = one offer per agent per
         cycle, the Mesos default behaviour). None = fill to saturation (the
         progressive-filling idealization of Section 2).
+
+        batched=True uses the incremental :class:`BatchedEpoch` engine with
+        the shared server-policy objects (reference-filler semantics for RRR
+        rounds); batched=False keeps the legacy per-grant offer semantics.
         """
+        if batched:
+            return self.allocate_batched(per_agent_limit)
         grants: list[Grant] = []
         used: dict[str, int] = {}
         guard = 0
@@ -214,6 +256,51 @@ class OnlineAllocator:
                 return grants
             used[g.agent] = used.get(g.agent, 0) + 1
             grants.append(g)
+
+    def allocate_batched(self, per_agent_limit: Optional[int] = None,
+                         tie: str = "low", use_kernel: bool = False) -> list[Grant]:
+        """Batched epoch: score once, grant many (see module docstring).
+
+        ``use_kernel=True`` opts into the fused Pallas ``psdsf_score``
+        backend for characterized rPS-DSF + pooled selection at large N x J
+        (silently falls back to the numpy incremental path otherwise)."""
+        if not self.frameworks or self.state.n_agents == 0:
+            return []
+        view = self.state.sorted_view()
+        N = len(view.fids)
+        TD = np.zeros((N, self.R))
+        for i, f in enumerate(view.fids):
+            fw = self.frameworks[f]
+            if fw.n_tasks < fw.wanted_tasks:
+                TD[i] = self._true_demand(f)
+        usage = None
+        if self.mode == "oblivious":
+            usage = np.array([self.frameworks[f].usage for f in view.fids])
+        epoch = BatchedEpoch(
+            self.crit, self.server_policy,
+            X=view.X, D=view.D, C=view.C, FREE=view.FREE, phi=view.phi,
+            allowed=view.allowed, wanted=view.wanted, true_demands=TD,
+            mode=self.mode, lookahead=False, tie=tie, rng=self.rng,
+            bf_metric=self.bf_metric, per_agent_limit=per_agent_limit,
+            usage=usage, use_kernel=use_kernel,
+        )
+        grants: list[Grant] = []
+        passes_d = self.crit.server_specific and self.mode == "oblivious"
+        for _ in range(100_000):
+            pick = epoch.select()
+            if pick is None:
+                return grants
+            n, j = pick
+            fid = view.fids[n]
+            g = self._grant(fid, view.agents[j])
+            grants.append(g)
+            fw = self.frameworks[fid]
+            epoch.apply(
+                n, j, g.bundle, g.n_executors,
+                new_demand_row=(fw.inferred_demand() if passes_d else None),
+                new_usage_row=(fw.usage if usage is not None else None),
+            )
+        raise RuntimeError("allocation epoch did not converge")
 
     # the paper's executor demands are known to the *framework* even in
     # oblivious mode (Spark needs them to size executors); the allocator
@@ -232,40 +319,41 @@ class OnlineAllocator:
         fw = self.frameworks[fid]
         return fw.n_tasks < fw.wanted_tasks
 
-    def _feasible_mask(self, fids, ags, FREE, blocked=()):
+    def _feasible_mask(self, view, blocked=()):
         """(N, A) one-more-executor feasibility using true demands."""
+        fids, ags = view.fids, view.agents
         feas = np.zeros((len(fids), len(ags)), bool)
         ok = np.array([a not in blocked for a in ags])
         for i, f in enumerate(fids):
-            fw = self.frameworks[f]
             if not self._wants(f):
                 continue
             d = self._true_demand(f)
-            row = (d[None, :] <= FREE + 1e-9).all(axis=1) & ok
-            if fw.allowed_agents is not None:
-                row &= np.array([a in fw.allowed_agents for a in ags])
-            feas[i] = row
+            feas[i] = (
+                (d[None, :] <= view.FREE + 1e-9).all(axis=1) & ok
+                & view.allowed[i]
+            )
         return feas
 
     def _allocate_one(self, blocked=()) -> Optional[Grant]:
-        if not self.frameworks or not self.agents:
+        if not self.frameworks or self.state.n_agents == 0:
             return None
-        fids, ags, X, D, C, FREE, phi = self._matrices()
-        feas = self._feasible_mask(fids, ags, FREE, blocked)
+        view = self.state.sorted_view()
+        fids, ags = view.fids, view.agents
+        feas = self._feasible_mask(view, blocked)
         if not feas.any():
             return None
-        scores = self._framework_scores(X, D, C, phi)
+        scores = self._framework_scores(view)
 
-        if self.server_policy == "pooled" and self.criterion in ("psdsf", "rpsdsf"):
+        if self.server_policy == "pooled" and self.crit.server_specific:
             s = np.where(feas, scores, np.inf)
             n, a = np.unravel_index(np.argmin(s), s.shape)
         elif self.server_policy == "bestfit":
             per_fw = np.where(feas, scores, np.inf).min(axis=1)
             n = int(np.argmin(per_fw))
-            bf = fairness.bestfit_scores(FREE, self._true_demand(fids[n]),
+            bf = criteria.bestfit_scores(view.FREE, self._true_demand(fids[n]),
                                          metric=self.bf_metric)
             a = int(np.argmin(np.where(feas[n], bf, np.inf)))
-        else:  # rrr
+        else:  # rrr (and pooled with a global criterion — legacy behaviour)
             order = self.rng.permutation(len(ags))
             a = next((j for j in order if feas[:, j].any()), None)
             if a is None:
@@ -277,6 +365,7 @@ class OnlineAllocator:
     def _grant(self, fid: str, agent: str) -> Grant:
         fw = self.frameworks[fid]
         d = self._true_demand(fid)
+        j = self.state.agent2slot[agent]
         if self.mode == "characterized":
             n_exec = 1
             bundle = d.copy()
@@ -286,15 +375,16 @@ class OnlineAllocator:
             # as many executors as fit; the remainder is HELD as slack until
             # the framework deregisters ("leaving nothing available for
             # others") — this is the oblivious-mode waste mechanism.
-            offer = self.free[agent].copy()
+            offer = self.state.FREE[j].copy()
             fit = int(np.floor((offer / np.maximum(d, 1e-30)).min()))
             n_exec = max(1, min(fit, fw.wanted_tasks - fw.n_tasks))
             bundle = offer
             fw.slack[agent] = fw.slack.get(agent, np.zeros(self.R)) + (offer - d * n_exec)
-        self.free[agent] = self.free[agent] - bundle
+        self.state.grant(fid, agent, bundle, n_exec)
         fw.tasks.setdefault(agent, []).extend([d.copy()] * n_exec)
         fw.usage = fw.usage + bundle
         fw.grants += 1
+        self._sync_demand(fid)
         return Grant(fid=fid, agent=agent, bundle=bundle, n_executors=n_exec)
 
     # -- metrics -------------------------------------------------------------

@@ -54,6 +54,9 @@ class SimConfig:
     submit_delay: float = 3.0            # Spark driver startup latency
     release_jitter: float = 2.0          # executors release non-simultaneously
     offers_per_agent: int = 1            # offers per agent per cycle (Mesos: 1)
+    batched: bool = False                # batched epoch engine (score once per
+                                         # cycle + incremental updates) instead
+                                         # of the legacy per-grant recompute
     seed: int = 0
 
 
@@ -276,7 +279,8 @@ class SparkMesosSim:
                 self.alloc.set_wanted(fid, 0)
         for jid, job in self.jobs.items():
             self.alloc.set_wanted(jid, self._wanted(job))
-        grants = self.alloc.allocate(per_agent_limit=self.cfg.offers_per_agent)
+        grants = self.alloc.allocate(per_agent_limit=self.cfg.offers_per_agent,
+                                     batched=self.cfg.batched)
         for g in grants:
             job = self.jobs[g.fid]
             for _ in range(g.n_executors):

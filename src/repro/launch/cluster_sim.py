@@ -43,8 +43,9 @@ def default_jobs(dryrun_dir: str = "artifacts/dryrun"):
     return jobs
 
 
-def run(criterion: str, seed: int = 0, n_epochs: int = 6, verbose: bool = True):
-    gs = GangScheduler(criterion=criterion, seed=seed)
+def run(criterion: str, seed: int = 0, n_epochs: int = 6, verbose: bool = True,
+        batched: bool = False):
+    gs = GangScheduler(criterion=criterion, seed=seed, batched=batched)
     rng = np.random.default_rng(seed)
     for i in range(6):
         gs.add_slice(f"fat{i}", "v5e-64-fat-host")
@@ -82,12 +83,14 @@ def main():
     ap.add_argument("--criterion", default="rpsdsf",
                     choices=["drf", "tsf", "psdsf", "rpsdsf"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batched", action="store_true",
+                    help="use the incremental batched epoch engine")
     args = ap.parse_args()
     print(f"== fleet gang-scheduling with {args.criterion} ==")
-    run(args.criterion, args.seed)
+    run(args.criterion, args.seed, batched=args.batched)
     print("== comparison: chip utilization after warm-up ==")
     for crit in ["drf", "psdsf", "rpsdsf"]:
-        log = run(crit, args.seed, verbose=False)
+        log = run(crit, args.seed, verbose=False, batched=args.batched)
         print(f"{crit:8s} chips={log[-1]['chips']:.3f} hbm={log[-1]['hbm_gib']:.3f} "
               f"ici={log[-1]['ici_gbps']:.3f}")
 

@@ -1,0 +1,49 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+Tier-1 (`python -m pytest -x -q`) must collect and run green without
+optional dependencies.  Test modules import ``given``/``settings``/``st``
+from here instead of from ``hypothesis`` directly: when hypothesis is
+installed the real objects are re-exported; when it is absent, property
+tests are collected but skipped, and the rest of the module (hand-computed
+checks, parametrized tests) runs normally.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning an opaque placeholder, and ``composite`` wraps the
+        decorated function into such a callable, so module-level strategy
+        construction never executes real code."""
+
+        def __getattr__(self, name):
+            if name == "composite":
+                return lambda fn: (lambda *a, **k: None)
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -1,0 +1,90 @@
+"""Golden scenario for online-allocator refactor parity.
+
+Runs a fixed, churn-heavy workload on the paper's heterogeneous cluster and
+records the exact grant sequence.  The JSON fixture
+(``tests/golden_online_grants.json``) was generated against the PRE-refactor
+allocator (per-grant dense-matrix rebuild); the refactored incremental
+``ClusterState`` allocator must reproduce it bit-for-bit for seeds 0-4,
+all four criteria and all three server policies (characterized mode).
+
+Regenerate (only when the *intended* semantics change):
+
+    PYTHONPATH=src python tests/golden_scenario.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.online import OnlineAllocator
+
+PI = (2.0, 2.0)
+WC = (1.0, 3.5)
+HETEROGENEOUS_AGENTS = (
+    [(f"type1-{i}", (4.0, 14.0)) for i in range(2)]
+    + [(f"type2-{i}", (8.0, 8.0)) for i in range(2)]
+    + [(f"type3-{i}", (6.0, 11.0)) for i in range(2)]
+)
+
+CRITERIA = ("drf", "tsf", "psdsf", "rpsdsf")
+POLICIES = ("rrr", "pooled", "bestfit")
+SEEDS = tuple(range(5))
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_online_grants.json")
+
+
+def run_scenario(criterion: str, policy: str, seed: int) -> list:
+    """Fixed churn scenario; returns the full [(fid, agent, n_exec)] sequence."""
+    al = OnlineAllocator(
+        2, criterion=criterion, server_policy=policy,
+        mode="characterized", seed=seed,
+    )
+    for name, cap in HETEROGENEOUS_AGENTS:
+        al.add_agent(name, cap)
+    al.register("pi", demand=PI, wanted_tasks=100)
+    al.register("wc", demand=WC, wanted_tasks=100)
+
+    events: list = []
+
+    def grab(grants):
+        events.extend((g.fid, g.agent, int(g.n_executors)) for g in grants)
+
+    grab(al.allocate(per_agent_limit=1))   # one Mesos offer cycle
+    grab(al.allocate())                    # fill to saturation
+
+    # churn: release two pi executors, fail an agent, re-allocate
+    held = [a for a in sorted(al.agents) if al.frameworks["pi"].tasks.get(a)]
+    al.release_executor("pi", held[0])
+    if len(held) > 1:
+        al.release_executor("pi", held[1])
+    al.remove_agent("type2-0")
+    grab(al.allocate())
+
+    # late registration + a weighted, placement-constrained framework
+    al.add_agent("type2-0", (8.0, 8.0))
+    al.register("hi", demand=(1.0, 1.0), wanted_tasks=6, phi=2.0,
+                allowed_agents=["type2-0", "type3-0"])
+    grab(al.allocate(per_agent_limit=2))
+    grab(al.allocate())
+
+    # drain a framework, re-fill
+    al.deregister("wc")
+    grab(al.allocate())
+    return events
+
+
+def generate() -> dict:
+    out = {}
+    for crit in CRITERIA:
+        for pol in POLICIES:
+            for seed in SEEDS:
+                out[f"{crit}/{pol}/{seed}"] = run_scenario(crit, pol, seed)
+    return out
+
+
+if __name__ == "__main__":
+    data = generate()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(data, f, separators=(",", ":"))
+    n = sum(len(v) for v in data.values())
+    print(f"wrote {GOLDEN_PATH}: {len(data)} scenarios, {n} grants")

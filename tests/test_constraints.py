@@ -3,7 +3,7 @@ paper's TSF reference, Wang+ SC'16) and weighted priorities (phi appears in
 the paper's formulas but is only evaluated at phi=1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or a skip-shim when absent
 
 from repro.cluster.gang import GangScheduler, JobSpec
 from repro.core.filling import FillConfig, progressive_fill

@@ -1,0 +1,217 @@
+"""Parity suite for the unified allocator engine.
+
+Three layers must agree on allocations:
+
+  1. the exact numpy reference filler (`repro.core.filling`),
+  2. the online allocator's batched epoch (`repro.core.engine.BatchedEpoch`
+     via `OnlineAllocator.allocate_batched`), and
+  3. the jitted JAX engine (`repro.core.filling_jax`),
+
+all dispatching into the single criterion module `repro.core.criteria`.
+Layers 1 and 2 share the numpy RNG stream through the same
+`repro.core.policies` objects, so their grant sequences are compared
+bit-for-bit across every criterion x policy combo (including phi != 1
+priorities and `allowed_agents` placement constraints).  The JAX engine
+draws randomness from a different PRNG, so it is compared bit-for-bit on the
+deterministic policies and distributionally under RRR (see
+tests/test_filling_jax.py).
+
+The golden test pins the *legacy per-grant* path to the pre-refactor grant
+sequences (tests/golden_online_grants.json, captured before the
+ClusterState refactor) for seeds 0-4 on the paper's heterogeneous cluster.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from golden_scenario import GOLDEN_PATH, run_scenario
+from repro.core.filling import FillConfig, progressive_fill
+from repro.core.instance import make_instance, spark_cluster_heterogeneous
+from repro.core.online import OnlineAllocator
+
+CRITERIA = ("drf", "tsf", "psdsf", "rpsdsf")
+POLICIES = ("rrr", "pooled", "bestfit")
+
+
+def _instances():
+    return {
+        "heterogeneous": spark_cluster_heterogeneous(),
+        "weighted": make_instance(
+            demands=[[2.0, 2.0], [1.0, 3.5], [1.0, 1.0]],
+            capacities=[[4.0, 14.0], [8.0, 8.0], [6.0, 11.0]],
+            weights=[2.0, 1.0, 0.5],
+        ),
+        "constrained": make_instance(
+            demands=[[2.0, 2.0], [1.0, 3.5]],
+            capacities=[[4.0, 14.0], [8.0, 8.0], [6.0, 11.0]],
+            weights=[1.0, 2.0],
+            allowed=[[True, True, False], [True, True, True]],
+        ),
+    }
+
+
+def _batched_fill(inst, criterion, policy, seed, tie="low", use_kernel=False):
+    """Drive the online allocator's batched epoch over an Instance; returns
+    (X, grant order) with frameworks/agents named so that the allocator's
+    sorted order matches the instance's index order."""
+    al = OnlineAllocator(inst.n_resources, criterion=criterion,
+                         server_policy=policy, mode="characterized", seed=seed)
+    J = inst.n_servers
+    for j in range(J):
+        al.add_agent(f"a{j:03d}", inst.capacities[j])
+    for n in range(inst.n_frameworks):
+        allowed = None
+        if not inst.allowed[n].all():
+            allowed = [f"a{j:03d}" for j in range(J) if inst.allowed[n, j]]
+        al.register(f"f{n:03d}", demand=inst.demands[n], wanted_tasks=10**6,
+                    phi=inst.weights[n], allowed_agents=allowed)
+    grants = al.allocate_batched(tie=tie, use_kernel=use_kernel)
+    X = np.zeros((inst.n_frameworks, J), np.int64)
+    order = []
+    for g in grants:
+        n, j = int(g.fid[1:]), int(g.agent[1:])
+        X[n, j] += g.n_executors
+        order.append((n, j))
+    return X, order
+
+
+@pytest.mark.parametrize("crit", CRITERIA)
+@pytest.mark.parametrize("pol", POLICIES)
+def test_batched_epoch_matches_reference_filler(crit, pol):
+    """Same criterion code + same policy objects + same RNG stream =>
+    identical grant sequences, for every instance (incl. phi != 1 and
+    placement constraints) and several seeds."""
+    for name, inst in _instances().items():
+        for seed in (0, 1, 2):
+            cfg = FillConfig(criterion=crit, server_policy=pol,
+                             lookahead=False, tie="low")
+            ref = progressive_fill(inst, cfg, seed=seed)
+            X, order = _batched_fill(inst, crit, pol, seed, tie="low")
+            np.testing.assert_array_equal(ref.x, X, err_msg=f"{name}/{seed}")
+            assert ref.order == order, f"{name}/{seed}"
+
+
+@pytest.mark.parametrize("crit", ["drf", "rpsdsf"])
+def test_batched_epoch_matches_reference_random_ties(crit):
+    """Random tie-breaking consumes the shared RNG identically."""
+    inst = spark_cluster_heterogeneous()
+    for seed in (0, 1, 2):
+        cfg = FillConfig(criterion=crit, server_policy="rrr",
+                         lookahead=False, tie="random")
+        ref = progressive_fill(inst, cfg, seed=seed)
+        X, order = _batched_fill(inst, crit, "rrr", seed, tie="random")
+        np.testing.assert_array_equal(ref.x, X)
+        assert ref.order == order
+
+
+def test_jax_engine_matches_reference_weighted_constrained():
+    """The JAX engine dispatches into the same criterion module; check
+    bit-for-bit agreement on the deterministic policies with phi != 1 and
+    placement constraints (RRR agreement is distributional — different PRNG —
+    and covered in test_filling_jax.py)."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.filling_jax import progressive_fill_jax
+
+    for name, inst in _instances().items():
+        for crit, pol in [("psdsf", "pooled"), ("rpsdsf", "pooled"),
+                          ("drf", "bestfit"), ("tsf", "pooled"),
+                          ("drf", "pooled"), ("rpsdsf", "bestfit")]:
+            xj = progressive_fill_jax(
+                jnp.asarray(inst.demands, jnp.float32),
+                jnp.asarray(inst.capacities, jnp.float32),
+                jnp.asarray(inst.weights, jnp.float32),
+                jax.random.key(0), criterion=crit, policy=pol,
+                lookahead=False, tie="low",
+                allowed=jnp.asarray(inst.allowed),
+            )
+            cfg = FillConfig(criterion=crit, server_policy=pol,
+                             lookahead=False, tie="low")
+            xn = progressive_fill(inst, cfg, seed=0).x
+            np.testing.assert_array_equal(
+                np.asarray(xj), xn, err_msg=f"{name}/{crit}/{pol}")
+
+
+def test_kernel_backend_matches_numpy_batched():
+    """Opt-in Pallas psdsf_score backend (characterized rPS-DSF pooled)."""
+    pytest.importorskip("jax")
+    inst = spark_cluster_heterogeneous()
+    X_np, order_np = _batched_fill(inst, "rpsdsf", "pooled", 0)
+    X_k, order_k = _batched_fill(inst, "rpsdsf", "pooled", 0, use_kernel=True)
+    np.testing.assert_array_equal(X_np, X_k)
+    assert order_np == order_k
+
+
+def test_batched_epoch_respects_per_agent_limit():
+    al = OnlineAllocator(2, criterion="drf", server_policy="rrr", seed=0)
+    for j in range(4):
+        al.add_agent(f"a{j}", (8.0, 8.0))
+    al.register("f", demand=(1.0, 1.0), wanted_tasks=100)
+    grants = al.allocate(per_agent_limit=1, batched=True)
+    per_agent = {}
+    for g in grants:
+        per_agent[g.agent] = per_agent.get(g.agent, 0) + 1
+    assert per_agent and all(v == 1 for v in per_agent.values())
+
+
+def test_batched_oblivious_epoch_consistent():
+    """Oblivious batched epochs stay capacity-consistent and coarse-grained."""
+    al = OnlineAllocator(2, criterion="rpsdsf", server_policy="rrr",
+                         mode="oblivious", seed=0)
+    al.framework_demand_oracle = lambda fid: np.array([2.0, 2.0])
+    for j in range(3):
+        al.add_agent(f"a{j}", (8.0, 8.0))
+    al.register("pi", wanted_tasks=10)
+    grants = al.allocate(batched=True)
+    assert grants and grants[0].n_executors >= 1
+    for j, free in al.free.items():
+        assert (free >= -1e-9).all()
+    assert al.frameworks["pi"].n_tasks <= 10
+
+
+def test_golden_online_grant_sequences():
+    """The refactored (ClusterState-backed) legacy path reproduces the
+    pre-refactor grant sequences bit-for-bit: seeds 0-4, all four criteria,
+    all three server policies, characterized mode, with agent churn, releases
+    and weighted/constrained late arrivals (see tests/golden_scenario.py)."""
+    assert os.path.exists(GOLDEN_PATH), "golden fixture missing"
+    gold = json.load(open(GOLDEN_PATH))
+    assert len(gold) == 60
+    for key, want in gold.items():
+        crit, pol, seed = key.split("/")
+        got = [list(g) for g in run_scenario(crit, pol, int(seed))]
+        assert got == want, f"grant sequence diverged for {key}"
+
+
+def test_cluster_state_slot_reuse_and_growth():
+    """Stable slots survive churn; views stay name-sorted and consistent."""
+    from repro.core.cluster_state import ClusterState
+
+    st = ClusterState(2, fw_capacity=2, agent_capacity=2)
+    for i in range(5):  # force growth
+        st.add_agent(f"a{i}", (4.0 + i, 8.0))
+    for i in range(5):
+        st.add_framework(f"f{i}", demand=(1.0, 1.0), phi=1.0 + i, wanted=3)
+    st.grant("f0", "a1", np.array([1.0, 1.0]))
+    st.remove_agent("a0")
+    st.remove_framework("f3")
+    j_new = st.add_agent("a9", (2.0, 2.0))      # reuses a0's slot
+    n_new = st.add_framework("f9", demand=(0.5, 0.5),
+                             allowed_agents=["a9", "a1"], wanted=1)
+    assert j_new == st.agent2slot["a9"] and n_new == st.fid2slot["f9"]
+    v = st.sorted_view()
+    assert v.fids == ("f0", "f1", "f2", "f4", "f9")
+    assert v.agents == ("a1", "a2", "a3", "a4", "a9")
+    # X survived churn at the right coordinates
+    assert v.X[v.fids.index("f0"), v.agents.index("a1")] == 1
+    np.testing.assert_allclose(
+        v.FREE[v.agents.index("a1")], np.array([5.0, 8.0]) - 1.0)
+    # name-based placement constraints materialized for the sorted view
+    row = v.allowed[v.fids.index("f9")]
+    np.testing.assert_array_equal(
+        row, [a in ("a9", "a1") for a in v.agents])
+    # phi/wanted rows follow their frameworks
+    assert v.phi[v.fids.index("f4")] == 5.0

@@ -1,7 +1,7 @@
 """Unit + property tests for the fairness criteria and filling engines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or a skip-shim when absent
 
 from repro.core import fairness
 from repro.core.filling import FillConfig, PAPER_SCHEDULERS, progressive_fill, run_trials
