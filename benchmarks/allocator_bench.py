@@ -15,6 +15,7 @@ Emits a JSON trajectory document (--out) plus a CSV block on stdout:
 
     PYTHONPATH=src python -m benchmarks.allocator_bench
     PYTHONPATH=src python -m benchmarks.allocator_bench --big --reps 5
+    PYTHONPATH=src python -m benchmarks.allocator_bench --quick   # CI smoke
 """
 from __future__ import annotations
 
@@ -106,8 +107,14 @@ def main():
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--big", action="store_true",
                     help="add a 1000x400 fleet-scale point")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: one small size, one rep, two criteria")
     ap.add_argument("--out", default="artifacts/bench/allocator_bench.json")
     args = ap.parse_args()
+    if args.quick:
+        run(sizes=((50, 25),), criteria=("drf", "rpsdsf"),
+            policies=("rrr", "bestfit"), reps=1, out=args.out)
+        return
     sizes = [(50, 25), (200, 100)] + ([(1000, 400)] if args.big else [])
     run(sizes=tuple(sizes), reps=args.reps, out=args.out)
 

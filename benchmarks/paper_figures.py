@@ -1,8 +1,9 @@
 """Reproduces the paper's Figures 3-8 (Section 3 Mesos/Spark experiments).
 
 Runs the discrete-event Spark-on-Mesos simulator over the experiment matrix
-(criterion x information mode, heterogeneous + homogeneous clusters) and
-emits CSV: figure,config,makespan,used_cpu,used_mem,used_cpu_std,alloc_cpu
+(criterion x information mode, heterogeneous + homogeneous clusters) with a
+fairness-over-time hook attached, and emits CSV:
+figure,config,makespan,used_cpu,used_mem,used_cpu_std,alloc_cpu,jain_tw
 
 Claims validated (qualitatively, as in the paper):
   Fig 3/4: PS-DSF >= DRF utilization, earlier batch completion (heterogeneous)
@@ -14,6 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.metrics import FairnessTimelineHook
 from repro.core.simulator import (
     HETEROGENEOUS_AGENTS,
     HOMOGENEOUS_AGENTS,
@@ -27,12 +29,14 @@ JOBS_PER_QUEUE = 10
 def _avg(crit, mode, agents=None, server_policy="rrr"):
     out = []
     for s in SEEDS:
+        fair = FairnessTimelineHook()
         r = run_paper_experiment(
             crit, mode, agents=agents, server_policy=server_policy,
-            jobs_per_queue=JOBS_PER_QUEUE, seed=s,
+            jobs_per_queue=JOBS_PER_QUEUE, seed=s, hooks=[fair],
         )
         out.append(
-            (r.makespan, r.mean_used(0), r.mean_used(1), r.used_std(0), r.mean_util(0))
+            (r.makespan, r.mean_used(0), r.mean_used(1), r.used_std(0),
+             r.mean_util(0), fair.summary()["jain_tw_mean"])
         )
     return np.mean(out, axis=0)
 
@@ -57,9 +61,9 @@ def run(print_csv: bool = True):
         rows[name] = _avg(crit, mode, agents, pol)
 
     if print_csv:
-        print("figure_config,makespan,used_cpu,used_mem,used_cpu_std,alloc_cpu")
-        for name, (m, c, me, sv, ac) in rows.items():
-            print(f"{name},{m:.1f},{c:.3f},{me:.3f},{sv:.3f},{ac:.3f}")
+        print("figure_config,makespan,used_cpu,used_mem,used_cpu_std,alloc_cpu,jain_tw")
+        for name, (m, c, me, sv, ac, jn) in rows.items():
+            print(f"{name},{m:.1f},{c:.3f},{me:.3f},{sv:.3f},{ac:.3f},{jn:.3f}")
         checks = [
             ("fig3/4: char PS-DSF <= char DRF makespan",
              rows["fig4_char_PS-DSF"][0] <= rows["fig4_char_DRF"][0] * 1.02),

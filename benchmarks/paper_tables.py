@@ -1,6 +1,9 @@
 """Reproduces the paper's Tables 1-4 (Section 2 illustrative example).
 
-Emits CSV rows: table,scheduler,cell,value,paper_value
+Emits CSV rows: table,scheduler,cell,value,paper_value — plus a
+T5_jain_dominant_share row per scheduler: Jain's fairness index over the
+frameworks' dominant shares at the final allocation (repro.core.metrics),
+quantifying the fairness/packing trade-off the tables only imply.
 """
 from __future__ import annotations
 
@@ -8,6 +11,7 @@ import numpy as np
 
 from repro.core.filling import PAPER_SCHEDULERS, progressive_fill, run_trials
 from repro.core.instance import paper_example
+from repro.core.metrics import dominant_shares, jain_index
 
 N_TRIALS = 200
 
@@ -47,17 +51,27 @@ def run(print_csv: bool = True):
         for i, (v, p) in enumerate(zip(np.ravel(cells), np.ravel(paper))):
             rows.append((table, sched, i, float(v), float(p)))
 
+    def jain_of(x_alloc):
+        # x_alloc (N,) total tasks -> (N, R) held resources -> dominant shares
+        usage = np.asarray(x_alloc)[:, None] * inst.demands
+        s = dominant_shares(usage, inst.capacities.sum(axis=0), inst.weights)
+        return jain_index(s)
+
     for name in STOCHASTIC:
         x = run_trials(inst, PAPER_SCHEDULERS[name], N_TRIALS, seed=1)
         res = np.array([inst.residual(xi) for xi in x])
         emit("T1_alloc_mean", name, x.mean(0), PAPER_T1[name])
         emit("T2_alloc_std", name, x.std(0, ddof=1), PAPER_T2[name])
         emit("T3_unused_mean", name, res.mean(0), PAPER_T3[name])
+        rows.append(("T5_jain_dominant_share", name, 0,
+                     float(np.mean([jain_of(xi.sum(axis=1)) for xi in x])), 1.0))
 
     for name in DETERMINISTIC:
         r = progressive_fill(inst, PAPER_SCHEDULERS[name], seed=0)
         emit("T1_alloc_mean", name, r.x, PAPER_T1[name])
         emit("T3_unused_mean", name, r.residual, PAPER_T3[name])
+        rows.append(("T5_jain_dominant_share", name, 0,
+                     jain_of(np.asarray(r.x, np.float64).sum(axis=1)), 1.0))
 
     if print_csv:
         print("table,scheduler,cell,value,paper_value")

@@ -24,6 +24,10 @@ def main() -> None:
     from benchmarks import paper_figures
     paper_figures.run()
 
+    _section("Scenario sweep: criterion x workload fairness-over-time (quick)")
+    from benchmarks import scenario_sweep
+    scenario_sweep.run(quick=True, out=None)
+
     _section("Figure 9: BF-DRF lock-in vs rPS-DSF adaptation")
     from benchmarks import fig9_adaptation
     fig9_adaptation.run()

@@ -1,0 +1,149 @@
+"""Scenario sweep: criterion x server-policy x workload-shape grids on the
+batched allocation engine, with fairness-over-time telemetry.
+
+The paper compares criteria on ONE workload (the synthetic Pi/WordCount
+queue mix).  This sweep runs every criterion over qualitatively different
+arrival shapes — the paper's closed-loop queues, bursty submissions,
+heavy-tailed interarrivals, and a Spark-style trace replay — and records,
+per cell: makespan, time-weighted utilization, Jain's fairness index over
+time (trajectory + time-weighted mean/min) and per-group job slowdowns.
+
+All cells run the incremental batched epoch engine (``batched=True``; the
+per-grant legacy path is available via ``--pergrant`` for comparison) —
+``run_paper_experiment`` asserts engine parity on first use.
+
+    PYTHONPATH=src python -m benchmarks.scenario_sweep            # full grid
+    PYTHONPATH=src python -m benchmarks.scenario_sweep --quick    # CI-sized
+
+Writes a JSON trajectory document to ``BENCH_scenarios.json`` at the repo
+root (override with --out).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core.metrics import FairnessTimelineHook, SlowdownHook
+from repro.core.simulator import PI, WC, run_paper_experiment
+from repro.core.workloads import (
+    SyntheticQueueSource,
+    TraceReplaySource,
+    bursty_arrivals,
+    heavy_tailed_arrivals,
+)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_TRACE = os.path.join(_REPO_ROOT, "artifacts", "traces",
+                      "sample_spark_trace.json")
+_SPECS = {"Pi": PI, "WordCount": WC}
+
+
+def _workload_builders(quick: bool) -> dict:
+    """name -> zero-arg builder (closed-loop sources are single-shot, so
+    every simulation gets a fresh instance)."""
+    jq = 2 if quick else 4
+    nq = 3 if quick else 5
+    n_jobs = 12 if quick else 24
+    return {
+        "paper-queues": lambda: SyntheticQueueSource(
+            _SPECS, jobs_per_queue=jq, n_queues_per_group=nq),
+        "bursty": lambda: bursty_arrivals(
+            _SPECS, n_bursts=3 if quick else 5, burst_size=4,
+            burst_gap_s=40.0, seed=11),
+        "heavy-tailed": lambda: heavy_tailed_arrivals(
+            _SPECS, n_jobs=n_jobs, mean_interarrival_s=6.0, alpha=1.4, seed=7),
+        "trace-replay": lambda: TraceReplaySource.from_file(_TRACE),
+    }
+
+
+def _downsample(t, v, max_points: int = 64):
+    t = np.asarray(t)
+    v = np.asarray(v)
+    if t.size <= max_points:
+        return t.tolist(), v.tolist()
+    idx = np.linspace(0, t.size - 1, max_points).round().astype(int)
+    return t[idx].tolist(), v[idx].tolist()
+
+
+def _cell(workload_name, builder, criterion, policy, seed, batched):
+    fair, slow = FairnessTimelineHook(), SlowdownHook()
+    r = run_paper_experiment(
+        criterion, "characterized", server_policy=policy, seed=seed,
+        batched=batched, workload=builder(), hooks=[fair, slow],
+    )
+    f = fair.summary()
+    ts, js = _downsample(*fair.jain_series())
+    return {
+        "workload": workload_name, "criterion": criterion, "policy": policy,
+        "seed": seed,
+        "makespan": r.makespan,
+        "used_cpu": r.mean_used(0), "used_mem": r.mean_used(1),
+        "used_cpu_std": r.used_std(0),
+        "jain_tw_mean": f["jain_tw_mean"], "jain_min": f["jain_min"],
+        "group_share_tw_mean": f["group_share_tw_mean"],
+        "jain_series": {"t": ts, "jain": js},
+        "slowdown": slow.summary(),
+        "n_jobs": sum(len(v) for v in r.job_durations.values()),
+    }
+
+
+def run(criteria=None, policies=None, seeds=None, quick: bool = False,
+        batched: bool = True, out: str | None = None,
+        print_csv: bool = True) -> dict:
+    """``quick`` shrinks the grid (CI-sized) but never overrides an
+    explicitly passed criteria/policies/seeds."""
+    if criteria is None:
+        criteria = ("drf", "psdsf", "rpsdsf") if quick else \
+            ("drf", "tsf", "psdsf", "rpsdsf")
+    if policies is None:
+        policies = ("rrr",) if quick else ("rrr", "bestfit")
+    if seeds is None:
+        seeds = (0,) if quick else (0, 1)
+    builders = _workload_builders(quick)
+    results = []
+    for wname, builder in builders.items():
+        for crit in criteria:
+            for pol in policies:
+                for seed in seeds:
+                    results.append(_cell(wname, builder, crit, pol, seed,
+                                         batched))
+    doc = {
+        "bench": "scenario_sweep",
+        "engine": "batched" if batched else "pergrant",
+        "grid": {"workloads": list(builders), "criteria": list(criteria),
+                 "policies": list(policies), "seeds": list(seeds)},
+        "results": results,
+    }
+    if print_csv:
+        print("workload,criterion,policy,seed,makespan,used_cpu,"
+              "jain_tw,jain_min,worst_p95_slowdown")
+        for r in results:
+            worst = max((g["p95"] for g in r["slowdown"].values()), default=0.0)
+            print(f"{r['workload']},{r['criterion']},{r['policy']},{r['seed']},"
+                  f"{r['makespan']:.1f},{r['used_cpu']:.3f},"
+                  f"{r['jain_tw_mean']:.3f},{r['jain_min']:.3f},{worst:.2f}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+        if print_csv:
+            print(f"# wrote {out}")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized grid (3 criteria x 1 policy x 1 seed)")
+    ap.add_argument("--pergrant", action="store_true",
+                    help="legacy per-grant engine instead of batched epochs")
+    ap.add_argument("--out", default=os.path.join(_REPO_ROOT,
+                                                  "BENCH_scenarios.json"))
+    args = ap.parse_args()
+    run(quick=args.quick, batched=not args.pergrant, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

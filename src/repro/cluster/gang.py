@@ -122,3 +122,20 @@ class GangScheduler:
     def utilization(self) -> dict:
         u = self.alloc.utilization()
         return dict(zip(RESOURCES, (float(x) for x in u)))
+
+    def snapshot(self):
+        """Telemetry snapshot (repro.core.online.AllocSnapshot) — feed it to
+        repro.core.metrics helpers (dominant_shares, jain_index)."""
+        return self.alloc.snapshot()
+
+
+def slice_agents(counts: dict) -> list:
+    """{slice_type: n} -> [(name, capacity)] for the DES simulator; pair
+    with :func:`repro.core.workloads.gang_arrivals` to replay gang
+    :class:`JobSpec` streams through ``SparkMesosSim`` under the same
+    criteria/telemetry as the paper's Spark queues."""
+    agents = []
+    for stype, n in counts.items():
+        cap = SLICE_TYPES[stype]
+        agents.extend((f"{stype}-{i}", cap) for i in range(n))
+    return agents

@@ -1,0 +1,243 @@
+"""Fairness-over-time telemetry for the Spark-on-Mesos simulator.
+
+Ownership split (see also :mod:`repro.core.workloads`):
+
+  * **workloads own *what arrives when*** (:mod:`repro.core.workloads`);
+  * **metrics own *what is measured*** — every timeline, fairness index and
+    slowdown statistic lives here, computed from allocator snapshots through
+    an event-hook protocol;
+  * **the simulator owns *event ordering only*** — it calls hooks at
+    well-defined points and keeps no inline telemetry of its own.
+
+Hook protocol (:class:`SimHook`): the simulator calls
+
+  * ``on_start(sim)`` once before the first allocation epoch;
+  * ``on_sample(sample)`` after every state change it used to record
+    (allocation epochs, releases, deregistrations) with a :class:`Sample`:
+    the wall-clock, an :class:`~repro.core.online.AllocSnapshot` of the
+    allocator (per-framework usage vs. pooled capacity) and the demand
+    vector of executors actively running tasks;
+  * ``on_submit(t, jid, spec)`` / ``on_finish(t, jid, spec, duration,
+    n_tasks)`` around each job's lifetime;
+  * ``on_end(t)`` when the run stops.
+
+The vectorized helpers (:func:`tw_mean`, :func:`tw_std`,
+:func:`dominant_shares`, :func:`jain_index`) are exposed separately so
+offline consumers (benchmarks, notebooks) can apply the same formulas to
+recorded series — ``SimResult`` delegates its time-weighted moments here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# vectorized building blocks
+# ---------------------------------------------------------------------------
+
+def tw_mean(t, v) -> float:
+    """Time-weighted mean of a left-constant step series v(t)."""
+    t = np.asarray(t, np.float64)
+    v = np.asarray(v, np.float64)
+    if len(t) < 2:
+        return 0.0
+    dt = np.diff(t)
+    return float(np.sum(v[:-1] * dt) / max(np.sum(dt), 1e-12))
+
+
+def tw_std(t, v) -> float:
+    """Time-weighted standard deviation of a left-constant step series."""
+    t = np.asarray(t, np.float64)
+    v = np.asarray(v, np.float64)
+    if len(t) < 2:
+        return 0.0
+    dt = np.diff(t)
+    m = tw_mean(t, v)
+    return float(np.sqrt(np.sum((v[:-1] - m) ** 2 * dt) / max(np.sum(dt), 1e-12)))
+
+
+def dominant_shares(usage, cap_total, phi=None) -> np.ndarray:
+    """(N,) weighted dominant shares max_r usage_{n,r} / (phi_n * sum_j c_{j,r}).
+
+    The quantity DRF equalizes — computed on *held* resources (executors +
+    coarse-offer slack), so oblivious-mode waste shows up as inflated shares.
+    """
+    usage = np.asarray(usage, np.float64)
+    if usage.size == 0:
+        return np.zeros(0)
+    cap = np.maximum(np.asarray(cap_total, np.float64), 1e-30)
+    s = np.max(usage / cap[None, :], axis=1)
+    if phi is not None:
+        s = s / np.maximum(np.asarray(phi, np.float64), 1e-30)
+    return s
+
+
+def jain_index(x) -> float:
+    """Jain's fairness index (sum x)^2 / (n * sum x^2) in [1/n, 1].
+
+    1.0 = perfectly equal shares.  Defined as 1.0 for empty input or
+    all-zero shares (nobody is being treated unequally)."""
+    x = np.asarray(x, np.float64)
+    if x.size == 0:
+        return 1.0
+    sq = float(np.sum(x * x))
+    if sq <= 0.0:
+        return 1.0
+    return float(np.sum(x)) ** 2 / (x.size * sq)
+
+
+def slowdown(duration: float, spec, n_tasks: Optional[int] = None) -> float:
+    """Job slowdown vs. its perfectly-parallel ideal runtime.
+
+    ideal = ceil(n_tasks / max_executors) * mean_task_s — the job's serial
+    work spread over the executors it asked for, no queueing, no stragglers.
+    """
+    n = int(n_tasks if n_tasks is not None else spec.n_tasks)
+    waves = max(1, -(-n // max(spec.max_executors, 1)))
+    ideal = waves * spec.mean_task_s
+    return float(duration) / max(ideal, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# hook protocol
+# ---------------------------------------------------------------------------
+
+class Sample(NamedTuple):
+    """One telemetry sample emitted by the simulator."""
+
+    t: float
+    alloc: "AllocSnapshot"   # repro.core.online.AllocSnapshot
+    busy: np.ndarray         # (R,) demand of executors actively running tasks
+
+
+class SimHook:
+    """Base class: all callbacks are optional no-ops."""
+
+    def on_start(self, sim) -> None:
+        pass
+
+    def on_sample(self, sample: Sample) -> None:
+        pass
+
+    def on_submit(self, t: float, jid: str, spec) -> None:
+        pass
+
+    def on_grant(self, t: float, grants) -> None:
+        pass
+
+    def on_finish(self, t: float, jid: str, spec, duration: float,
+                  n_tasks: int) -> None:
+        pass
+
+    def on_end(self, t: float) -> None:
+        pass
+
+
+class GrantLogHook(SimHook):
+    """Records the exact grant sequence (fid, agent, n_executors) — the
+    engine-parity witness used by ``assert_batched_parity``."""
+
+    def __init__(self):
+        self.grants: list = []
+
+    def on_grant(self, t, grants) -> None:
+        self.grants.extend((g.fid, g.agent, g.n_executors) for g in grants)
+
+
+class UtilizationTimelineHook(SimHook):
+    """The legacy ``SimResult.timeline`` rows: (t, allocated_r..., utilized_r...).
+
+    allocated = fraction of pooled capacity handed to frameworks (including
+    coarse-offer slack); utilized = demand of executors actively running a
+    task.  Bit-for-bit identical to the pre-refactor inline ``_record``.
+    """
+
+    def __init__(self):
+        self.rows: list = []
+
+    def on_sample(self, sample: Sample) -> None:
+        snap = sample.alloc
+        if snap.cap_total is None:
+            return
+        cap = np.maximum(snap.cap_total, 1e-30)
+        allocated = (snap.cap_total - snap.free_total) / cap
+        self.rows.append((sample.t, *allocated, *(sample.busy / cap)))
+
+    def timeline(self, n_resources: int) -> np.ndarray:
+        if not self.rows:
+            return np.zeros((0, 1 + 2 * n_resources))
+        return np.array(self.rows)
+
+
+class FairnessTimelineHook(SimHook):
+    """Fairness-over-time: per-framework dominant shares, Jain's index, and
+    per-group aggregate shares at every sample point."""
+
+    def __init__(self):
+        self.t: list = []
+        self.jain: list = []
+        self.group_share: dict[str, list] = {}
+        self._group_of: dict[str, str] = {}
+        self._per_fw: list = []       # (t, fids, shares) ragged trajectory
+
+    def on_submit(self, t, jid, spec) -> None:
+        self._group_of[jid] = spec.group
+        if spec.group not in self.group_share:
+            # groups discovered mid-run held zero share until now
+            self.group_share[spec.group] = [0.0] * len(self.t)
+
+    def on_sample(self, sample: Sample) -> None:
+        snap = sample.alloc
+        if snap.cap_total is None:  # no agents registered (total failure)
+            return
+        s = dominant_shares(snap.usage, snap.cap_total, snap.phi)
+        self.t.append(sample.t)
+        self.jain.append(jain_index(s))
+        self._per_fw.append((sample.t, snap.fids, s))
+        by_group: dict[str, float] = {g: 0.0 for g in self.group_share}
+        for fid, sh in zip(snap.fids, s):
+            g = self._group_of.get(fid)
+            if g is not None:
+                by_group[g] = by_group.get(g, 0.0) + float(sh)
+        for g, series in self.group_share.items():
+            series.append(by_group.get(g, 0.0))
+
+    def jain_series(self) -> tuple:
+        return np.asarray(self.t), np.asarray(self.jain)
+
+    def summary(self) -> dict:
+        t = np.asarray(self.t)
+        jain = np.asarray(self.jain)
+        return {
+            "jain_tw_mean": tw_mean(t, jain),
+            "jain_min": float(jain.min()) if jain.size else 1.0,
+            "group_share_tw_mean": {
+                g: tw_mean(t, np.asarray(v)) for g, v in self.group_share.items()
+            },
+        }
+
+
+class SlowdownHook(SimHook):
+    """Per-group job slowdowns (observed duration / perfectly-parallel ideal)."""
+
+    def __init__(self):
+        self.by_group: dict[str, list] = {}
+
+    def on_finish(self, t, jid, spec, duration, n_tasks) -> None:
+        self.by_group.setdefault(spec.group, []).append(
+            slowdown(duration, spec, n_tasks)
+        )
+
+    def summary(self) -> dict:
+        out = {}
+        for g, v in self.by_group.items():
+            a = np.asarray(v)
+            out[g] = {
+                "n": int(a.size),
+                "mean": float(a.mean()),
+                "p95": float(np.percentile(a, 95)),
+                "max": float(a.max()),
+            }
+        return out

@@ -36,13 +36,27 @@ the allocator never rebuilds matrices from Python dicts.  Two epoch paths:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 
 from repro.core import criteria
 from repro.core.cluster_state import ClusterState
 from repro.core.engine import BatchedEpoch
+
+
+class AllocSnapshot(NamedTuple):
+    """Read-only telemetry snapshot of the allocator (see :meth:`snapshot`).
+
+    ``cap_total``/``free_total`` are ``None`` when no agents are registered.
+    This is the hook point :mod:`repro.core.metrics` consumes — metrics code
+    never reaches into allocator internals."""
+
+    fids: tuple              # registered frameworks, registration order
+    usage: np.ndarray        # (N, R) held resources (executors + slack)
+    phi: np.ndarray          # (N,) priority weights
+    cap_total: Optional[np.ndarray]   # (R,) pooled cluster capacity
+    free_total: Optional[np.ndarray]  # (R,) pooled free resources
 
 
 @dataclasses.dataclass
@@ -388,6 +402,21 @@ class OnlineAllocator:
         return Grant(fid=fid, agent=agent, bundle=bundle, n_executors=n_exec)
 
     # -- metrics -------------------------------------------------------------
+
+    def snapshot(self) -> AllocSnapshot:
+        """Telemetry snapshot for metrics hooks (O(N*R), no dict rebuilds)."""
+        slots = list(self.state.agent2slot.values())
+        cap = free = None
+        if slots:
+            cap = np.sum(self.state.C[slots], axis=0)
+            free = np.sum(self.state.FREE[slots], axis=0)
+        n = len(self.frameworks)
+        usage = (np.array([fw.usage for fw in self.frameworks.values()])
+                 if n else np.zeros((0, self.R)))
+        phi = np.fromiter((fw.phi for fw in self.frameworks.values()),
+                          np.float64, n)
+        return AllocSnapshot(fids=tuple(self.frameworks), usage=usage,
+                             phi=phi, cap_total=cap, free_total=free)
 
     def utilization(self) -> np.ndarray:
         """(R,) fraction of total capacity currently allocated."""

@@ -1,8 +1,6 @@
 """Discrete-event simulator of Spark workloads on a Mesos-style cluster.
 
 Models the paper's Section 3 experiments:
-  * two submission groups (Pi: CPU-bound, WordCount: memory-bound), each with
-    several job queues; every queue submits its jobs sequentially;
   * each job (= Mesos framework) is divided into microtasks; executors are
     Mesos tasks that *pull* microtasks from the driver (one at a time);
   * stragglers: a small fraction of tasks run ~10x long; with speculative
@@ -12,29 +10,37 @@ Models the paper's Section 3 experiments:
     and the allocator runs a new epoch (churn);
   * agents may register late (paper §3.7) or fail mid-run (fault injection).
 
+Ownership split: the simulator owns **event ordering only**.  What arrives
+when is a :class:`repro.core.workloads.WorkloadSource` (the paper's two-group
+queue mixes, bursty/heavy-tailed generators, gang-job streams, trace replay);
+what is measured is a set of :class:`repro.core.metrics.SimHook` objects fed
+allocator snapshots at every state change (the legacy ``SimResult.timeline``
+is itself produced by a built-in
+:class:`~repro.core.metrics.UtilizationTimelineHook`).
+
 The allocator is :class:`repro.core.online.OnlineAllocator`, so every
-(criterion x server-policy x mode) combination from the paper is runnable.
+(criterion x server-policy x mode) combination from the paper is runnable;
+``SimConfig.batched=True`` routes epochs through the incremental
+:class:`~repro.core.engine.BatchedEpoch` engine
+(:func:`assert_batched_parity` pins it against the legacy per-grant path).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import metrics as _metrics
 from repro.core.online import OnlineAllocator
-
-
-@dataclasses.dataclass(frozen=True)
-class JobSpec:
-    group: str
-    demand: tuple            # per-executor resources
-    n_tasks: int = 40        # mean microtasks per job (jittered per job)
-    mean_task_s: float = 8.0
-    max_executors: int = 12
-    size_jitter: float = 0.5  # n_tasks ~ U[(1-j)*n, (1+j)*n] — staggers churn
+from repro.core.workloads import (  # noqa: F401  (JobSpec re-exported: legacy API)
+    Arrival,
+    JobSpec,
+    SyntheticQueueSource,
+    WorkloadSource,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,19 +79,10 @@ class SimResult:
         return self.timeline[:, 0], self.timeline[:, col]
 
     def _twmean(self, col: int) -> float:
-        t, u = self._series(col)
-        if len(t) < 2:
-            return 0.0
-        dt = np.diff(t)
-        return float(np.sum(u[:-1] * dt) / max(np.sum(dt), 1e-12))
+        return _metrics.tw_mean(*self._series(col))
 
     def _twstd(self, col: int) -> float:
-        t, u = self._series(col)
-        if len(t) < 2:
-            return 0.0
-        dt = np.diff(t)
-        m = self._twmean(col)
-        return float(np.sqrt(np.sum((u[:-1] - m) ** 2 * dt) / max(np.sum(dt), 1e-12)))
+        return _metrics.tw_std(*self._series(col))
 
     # allocated = resources handed to frameworks (incl. coarse-offer slack);
     # utilized  = demand of executors actually running a task right now.
@@ -103,12 +100,17 @@ class SimResult:
 
 
 class _Job:
-    def __init__(self, jid, spec: JobSpec, rng: np.random.Generator, cfg: SimConfig):
+    def __init__(self, jid, spec: JobSpec, rng: np.random.Generator, cfg: SimConfig,
+                 lane: Optional[str] = None):
         self.jid = jid
         self.spec = spec
-        lo = max(1, int(spec.n_tasks * (1 - spec.size_jitter)))
-        hi = max(lo + 1, int(spec.n_tasks * (1 + spec.size_jitter)))
-        self.n_tasks = int(rng.integers(lo, hi + 1))
+        self.lane = lane
+        if spec.size_jitter > 0:
+            lo = max(1, int(spec.n_tasks * (1 - spec.size_jitter)))
+            hi = max(lo + 1, int(spec.n_tasks * (1 + spec.size_jitter)))
+            self.n_tasks = int(rng.integers(lo, hi + 1))
+        else:  # exact task counts (trace replay, gang streams)
+            self.n_tasks = int(spec.n_tasks)
         self.unlaunched = list(range(self.n_tasks))
         self.done: set = set()
         self.running: dict = {}          # task_id -> {copy_id: (executor, t_start, t_end)}
@@ -132,32 +134,47 @@ class _Job:
 
 
 class SparkMesosSim:
-    def __init__(self, agents, specs: dict, cfg: SimConfig,
-                 agent_schedule=None, failures=None):
-        """agents: [(name, capacity)]; specs: group -> JobSpec;
-        agent_schedule: optional [(time, name, capacity)] late registrations;
-        failures: optional [(time, name)] agent failures."""
+    """Pure event engine: (agents, workload, hooks) -> completed jobs.
+
+    ``workload`` is a :class:`~repro.core.workloads.WorkloadSource`; a plain
+    ``{group: JobSpec}`` dict is accepted for backward compatibility and
+    wrapped in a :class:`~repro.core.workloads.SyntheticQueueSource` shaped
+    by ``cfg`` (the paper's queue mix)."""
+
+    def __init__(self, agents, workload, cfg: SimConfig,
+                 agent_schedule=None, failures=None,
+                 hooks: Optional[Sequence] = None):
+        """agents: [(name, capacity)]; workload: WorkloadSource or
+        {group: JobSpec}; agent_schedule: optional [(time, name, capacity)]
+        late registrations; failures: optional [(time, name)] agent failures;
+        hooks: optional metrics.SimHook sequence."""
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
-        R = len(next(iter(specs.values())).demand)
+        if isinstance(workload, dict):
+            workload = SyntheticQueueSource(
+                workload, jobs_per_queue=cfg.jobs_per_queue,
+                n_queues_per_group=cfg.n_queues_per_group,
+                submit_delay=cfg.submit_delay,
+            )
+        self.workload = workload
+        R = workload.n_resources
         self.alloc = OnlineAllocator(
             n_resources=R, criterion=cfg.criterion, server_policy=cfg.server_policy,
             mode=cfg.mode, bf_metric=cfg.bf_metric, seed=cfg.seed,
         )
         self.alloc.framework_demand_oracle = self._demand_oracle
-        self.specs = specs
         self.jobs: dict[str, _Job] = {}
-        self.queues: dict[str, list] = {}     # queue id -> remaining job count
-        self.active_job: dict[str, str] = {}  # queue id -> jid
         self.events: list = []
         self.seq = itertools.count()
         self.now = 0.0
-        self.timeline: list = []
-        self.job_durations: dict = {g: [] for g in specs}
+        self._timeline_hook = _metrics.UtilizationTimelineHook()
+        self.hooks = (self._timeline_hook, *(hooks or ()))
+        self.job_durations: dict = {g: [] for g in workload.groups()}
         self.n_spec = 0
         self.n_requeued = 0
         self._eid = itertools.count()
         self._alloc_pending = False
+        self._pending_arrivals = 0       # scheduled but not yet submitted
 
         for name, cap in agents:
             self.alloc.add_agent(name, cap)
@@ -165,11 +182,6 @@ class SparkMesosSim:
             self._push(t, "agent_up", (name, cap))
         for t, name in (failures or []):
             self._push(t, "agent_down", name)
-
-        for g, spec in specs.items():
-            for q in range(cfg.n_queues_per_group):
-                qid = f"{g}-q{q}"
-                self.queues[qid] = [f"{qid}-j{i}" for i in range(cfg.jobs_per_queue)]
 
     # ------------------------------------------------------------------ util
 
@@ -179,34 +191,34 @@ class SparkMesosSim:
     def _push(self, t, kind, payload):
         heapq.heappush(self.events, (t, next(self.seq), kind, payload))
 
-    def _record(self):
-        cap = np.sum(list(self.alloc.agents.values()), axis=0) if self.alloc.agents else None
-        if cap is None:
-            return
-        busy = np.zeros_like(cap)
+    def _sample(self):
+        """Emit a telemetry sample to every hook (was the inline _record)."""
+        snap = self.alloc.snapshot()
+        busy = np.zeros(self.alloc.R)
         for job in self.jobs.values():
             n_busy = sum(len(c) for c in job.running.values())
             busy += np.asarray(job.spec.demand) * min(n_busy, len(job.executors))
-        self.timeline.append(
-            (self.now, *self.alloc.utilization(), *(busy / np.maximum(cap, 1e-30)))
-        )
-
-    def _group_of(self, jid: str) -> str:
-        return jid.split("-q")[0]
+        sample = _metrics.Sample(t=self.now, alloc=snap, busy=busy)
+        for h in self.hooks:
+            h.on_sample(sample)
 
     # ------------------------------------------------------------ lifecycle
 
-    def _submit_next(self, qid: str):
-        if not self.queues[qid]:
-            self.active_job.pop(qid, None)
-            return
-        jid = self.queues[qid].pop(0)
-        g = self._group_of(jid)
-        job = _Job(jid, self.specs[g], self.rng, self.cfg)
+    def _submit(self, arrival: Arrival):
+        if arrival.jid in self.jobs or arrival.jid in self.alloc.frameworks:
+            raise ValueError(f"duplicate job id {arrival.jid!r}")
+        job = _Job(arrival.jid, arrival.spec, self.rng, self.cfg,
+                   lane=arrival.lane)
         job.submit_time = self.now
-        self.jobs[jid] = job
-        self.active_job[qid] = jid
-        self.alloc.register(jid, demand=job.spec.demand, wanted_tasks=job.wanted())
+        self.jobs[arrival.jid] = job
+        self.alloc.register(arrival.jid, demand=job.spec.demand,
+                            wanted_tasks=job.wanted())
+        for h in self.hooks:
+            h.on_submit(self.now, arrival.jid, arrival.spec)
+
+    def _schedule_arrival(self, arrival: Arrival):
+        self._pending_arrivals += 1
+        self._push(arrival.time, "submit", arrival)
 
     def _dispatch(self, job: _Job):
         """Idle executors pull microtasks; near the barrier, speculate."""
@@ -244,20 +256,29 @@ class SparkMesosSim:
                 self.n_spec += 1
 
     def _finish_job(self, job: _Job):
-        g = self._group_of(job.jid)
-        self.job_durations[g].append(self.now - job.submit_time)
+        duration = self.now - job.submit_time
+        self.job_durations.setdefault(job.spec.group, []).append(duration)
         del self.jobs[job.jid]
-        qid = next(q for q, j in self.active_job.items() if j == job.jid)
+        for h in self.hooks:
+            h.on_finish(self.now, job.jid, job.spec, duration, job.n_tasks)
         # executors release with jitter ("may not simultaneously release");
         # the framework deregisters (freeing coarse-offer slack) last; the
-        # queue's next job submits after the driver-startup delay.
+        # lane's next job (if any) arrives per the workload source.
         jmax = 0.0
         for eid, agent in job.executors.items():
             jt = float(self.rng.uniform(0.0, self.cfg.release_jitter))
             jmax = max(jmax, jt)
             self._push(self.now + jt, "release_exec", (job.jid, agent))
         self._push(self.now + jmax + 1e-3, "deregister", job.jid)
-        self._push(self.now + self.cfg.submit_delay, "submit", qid)
+        nxt = self.workload.on_finish(job.lane, self.now)
+        if nxt is not None:
+            self._schedule_arrival(nxt)
+        elif job.lane is not None:
+            # the lane's (now idle) Spark driver still wakes the allocator
+            # one startup-delay later — legacy Mesos-cycle behaviour the
+            # grant sequences are pinned to (extra RRR epochs draw from the
+            # allocator RNG even when nothing new arrives)
+            self._push(self.now + self.cfg.submit_delay, "lane_idle", job.lane)
 
     def _wanted(self, job: _Job) -> int:
         # Coarse-grained (oblivious) Spark holds max executors until job end;
@@ -287,11 +308,13 @@ class SparkMesosSim:
                 eid = next(self._eid)
                 job.executors[eid] = g.agent
                 job.idle.append(eid)
+        for h in self.hooks:
+            h.on_grant(self.now, grants)
         for job in self.jobs.values():
             self._dispatch(job)
         if grants:
             self._mark_dirty()  # keep cycling while offers land (ramp-up)
-        self._record()
+        self._sample()
 
     # ---------------------------------------------------------------- events
 
@@ -342,8 +365,13 @@ class SparkMesosSim:
     # ------------------------------------------------------------------ run
 
     def run(self, until: float = float("inf")) -> SimResult:
-        for qid in list(self.queues):
-            self._submit_next(qid)
+        for h in self.hooks:
+            h.on_start(self)
+        for arrival in self.workload.start():
+            if arrival.time <= 0.0:
+                self._submit(arrival)
+            else:
+                self._schedule_arrival(arrival)
         self._allocate_and_dispatch()
         while self.events and self.now <= until:
             t, _s, kind, payload = heapq.heappop(self.events)
@@ -354,19 +382,22 @@ class SparkMesosSim:
                 self._alloc_pending = False
                 self._allocate_and_dispatch()
             elif kind == "submit":
-                self._submit_next(payload)
+                self._pending_arrivals -= 1
+                self._submit(payload)
+                self._mark_dirty()
+            elif kind == "lane_idle":
                 self._mark_dirty()
             elif kind == "release_exec":
                 fid, agent = payload
                 fw = self.alloc.frameworks.get(fid)
                 if fw is not None and fw.tasks.get(agent):
                     self.alloc.release_executor(fid, agent)
-                    self._record()
+                    self._sample()
                 self._mark_dirty()
             elif kind == "deregister":
                 if payload in self.alloc.frameworks:
                     self.alloc.deregister(payload)
-                    self._record()
+                    self._sample()
                 self._mark_dirty()
             elif kind == "agent_up":
                 name, cap = payload
@@ -374,13 +405,15 @@ class SparkMesosSim:
                 self._mark_dirty()
             elif kind == "agent_down":
                 self._on_agent_down(payload)
-            if all(not q for q in self.queues.values()) and not self.jobs:
+            if self._pending_arrivals == 0 and not self.jobs:
                 break
-        self._record()
+        self._sample()
+        for h in self.hooks:
+            h.on_end(self.now)
         R = self.alloc.R
         return SimResult(
             makespan=self.now,
-            timeline=np.array(self.timeline) if self.timeline else np.zeros((0, 1 + 2 * R)),
+            timeline=self._timeline_hook.timeline(R),
             n_resources=R,
             job_durations=self.job_durations,
             tasks_speculated=self.n_spec,
@@ -404,10 +437,57 @@ HETEROGENEOUS_AGENTS = (
 )
 HOMOGENEOUS_AGENTS = [(f"type3-{i}", (6.0, 11.0)) for i in range(6)]
 
+_batched_parity_ok = False
+
+
+def assert_batched_parity(seed: int = 0) -> None:
+    """Pin the batched epoch engine against the legacy per-grant path.
+
+    Runs one small paper experiment per deterministic server policy both
+    ways and asserts the grant sequences are IDENTICAL.  Stochastic RRR is
+    deliberately not asserted: the two paths consume the shared RNG stream
+    differently (per-grant permutes agents before every grant, the batched
+    policy object draws per-round), so sequences differ while remaining
+    distributionally equivalent — parity there is covered by the engine's
+    own golden/parity suites.  Cached per process (costs ~0.1 s once)."""
+    global _batched_parity_ok
+    if _batched_parity_ok:
+        return
+    for crit, pol in (("psdsf", "pooled"), ("rpsdsf", "bestfit")):
+        seqs = {}
+        for batched in (False, True):
+            cfg = SimConfig(criterion=crit, server_policy=pol,
+                            mode="characterized", jobs_per_queue=1,
+                            seed=seed, batched=batched)
+            hook = _metrics.GrantLogHook()
+            sim = SparkMesosSim(HETEROGENEOUS_AGENTS,
+                                {"Pi": PI, "WordCount": WC}, cfg, hooks=[hook])
+            sim.run()
+            seqs[batched] = hook.grants
+        if seqs[False] != seqs[True]:
+            raise AssertionError(
+                f"batched epoch diverged from per-grant path for "
+                f"{crit}/{pol} at seed {seed}: "
+                f"{seqs[False][:5]}... vs {seqs[True][:5]}..."
+            )
+    _batched_parity_ok = True
+
 
 def run_paper_experiment(criterion, mode, agents=None, server_policy="rrr",
-                         jobs_per_queue=10, seed=0, **kw) -> SimResult:
+                         jobs_per_queue=10, seed=0, batched: bool = False,
+                         workload: Optional[WorkloadSource] = None,
+                         hooks: Optional[Sequence] = None, **kw) -> SimResult:
+    """The paper's §3 experiment: criteria compared on a workload.
+
+    ``workload=None`` builds the paper's synthetic two-group queue mix;
+    any :class:`~repro.core.workloads.WorkloadSource` substitutes (trace
+    replay, bursty arrivals, ...).  ``batched`` selects the epoch engine —
+    honest by construction: the first call in a process asserts per-grant /
+    batched grant-sequence parity (see :func:`assert_batched_parity`)."""
+    assert_batched_parity()
     cfg = SimConfig(criterion=criterion, server_policy=server_policy, mode=mode,
-                    jobs_per_queue=jobs_per_queue, seed=seed, **kw)
-    sim = SparkMesosSim(agents or HETEROGENEOUS_AGENTS, {"Pi": PI, "WordCount": WC}, cfg)
+                    jobs_per_queue=jobs_per_queue, seed=seed, batched=batched,
+                    **kw)
+    src = workload if workload is not None else {"Pi": PI, "WordCount": WC}
+    sim = SparkMesosSim(agents or HETEROGENEOUS_AGENTS, src, cfg, hooks=hooks)
     return sim.run()

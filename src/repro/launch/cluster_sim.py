@@ -2,6 +2,12 @@
 architectures onto a heterogeneous TPU-slice fleet, with failures.
 
     PYTHONPATH=src python -m repro.launch.cluster_sim --criterion rpsdsf
+    PYTHONPATH=src python -m repro.launch.cluster_sim --des   # event-driven replay
+
+``--des`` replays the same gang jobs as an arrival stream through the
+discrete-event simulator (repro.core.workloads.gang_arrivals) with
+fairness-over-time hooks — the paper's telemetry on accelerator-shaped
+resources.
 """
 from __future__ import annotations
 
@@ -13,8 +19,10 @@ import os
 import numpy as np
 
 from repro.cluster.gang import (
-    GangScheduler, JobSpec, SLICE_TYPES, demand_from_dryrun,
+    GangScheduler, JobSpec, SLICE_TYPES, demand_from_dryrun, slice_agents,
 )
+from repro.core import metrics
+from repro.core.workloads import gang_arrivals
 
 
 def default_jobs(dryrun_dir: str = "artifacts/dryrun"):
@@ -62,9 +70,13 @@ def run(criterion: str, seed: int = 0, n_epochs: int = 6, verbose: bool = True,
     for epoch in range(n_epochs):
         grants = gs.schedule()
         util = gs.utilization()
-        log.append(util)
+        snap = gs.snapshot()
+        jain = metrics.jain_index(
+            metrics.dominant_shares(snap.usage, snap.cap_total, snap.phi)
+        )
+        log.append({**util, "jain": jain})
         if verbose:
-            print(f"epoch {epoch}: +{len(grants)} grants, util "
+            print(f"epoch {epoch}: +{len(grants)} grants, jain={jain:.3f}, util "
                   + " ".join(f"{k}={v:.2f}" for k, v in util.items()))
         # churn: a slice fails, a job completes, a new job arrives
         if epoch == 2:
@@ -78,6 +90,27 @@ def run(criterion: str, seed: int = 0, n_epochs: int = 6, verbose: bool = True,
     return log
 
 
+def run_des(criterion: str, seed: int = 0, verbose: bool = True,
+            batched: bool = True):
+    """Event-driven replay: the same gang jobs as a timed arrival stream
+    through the DES, with fairness-over-time telemetry."""
+    from repro.core.simulator import SimConfig, SparkMesosSim
+
+    agents = slice_agents({"v5e-64-fat-host": 6, "v5e-64": 6,
+                           "v5e-32-highici": 4})
+    src = gang_arrivals(default_jobs(), arrival_gap_s=20.0,
+                        mean_task_s=120.0, tasks_per_unit=4)
+    fair, slow = metrics.FairnessTimelineHook(), metrics.SlowdownHook()
+    cfg = SimConfig(criterion=criterion, mode="characterized", seed=seed,
+                    batched=batched, alloc_interval=2.0)
+    r = SparkMesosSim(agents, src, cfg, hooks=[fair, slow]).run()
+    f = fair.summary()
+    if verbose:
+        print(f"  makespan {r.makespan:7.1f}s  chips-used {r.mean_used(0):.2f}  "
+              f"jain-tw {f['jain_tw_mean']:.3f}  jain-min {f['jain_min']:.3f}")
+    return r, f, slow.summary()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--criterion", default="rpsdsf",
@@ -85,14 +118,23 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--batched", action="store_true",
                     help="use the incremental batched epoch engine")
+    ap.add_argument("--des", action="store_true",
+                    help="event-driven gang-arrival replay with fairness "
+                         "telemetry (batched engine)")
     args = ap.parse_args()
+    if args.des:
+        print("== DES replay: gang-job arrival stream, fairness over time ==")
+        for crit in ["drf", "psdsf", "rpsdsf"]:
+            print(f"[{crit}]")
+            run_des(crit, args.seed)
+        return
     print(f"== fleet gang-scheduling with {args.criterion} ==")
     run(args.criterion, args.seed, batched=args.batched)
-    print("== comparison: chip utilization after warm-up ==")
+    print("== comparison: chip utilization + fairness after warm-up ==")
     for crit in ["drf", "psdsf", "rpsdsf"]:
         log = run(crit, args.seed, verbose=False, batched=args.batched)
         print(f"{crit:8s} chips={log[-1]['chips']:.3f} hbm={log[-1]['hbm_gib']:.3f} "
-              f"ici={log[-1]['ici_gbps']:.3f}")
+              f"ici={log[-1]['ici_gbps']:.3f} jain={log[-1]['jain']:.3f}")
 
 
 if __name__ == "__main__":

@@ -19,3 +19,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh():
     """Single-device mesh with the production axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_abstract_mesh(shape: tuple, axes: tuple):
+    """Device-free AbstractMesh across jax API generations.
+
+    The constructor signature has changed across jax releases: some take
+    positional ``(axis_sizes, axis_names)``, others a single ``shape_tuple``
+    of (name, size) pairs.  Each known form is tried in turn; shape/axis
+    resolution (``mesh.shape``) — all the sharding rules consume — is stable
+    across them.
+    """
+    from jax.sharding import AbstractMesh
+
+    last_err = None
+    for form in ((tuple(zip(axes, shape)),), (shape, axes)):
+        try:
+            return AbstractMesh(*form)
+        except TypeError as e:
+            last_err = e
+    raise TypeError(
+        f"no known AbstractMesh constructor form matched this jax version "
+        f"(update make_abstract_mesh): {last_err}"
+    )

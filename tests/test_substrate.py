@@ -215,10 +215,10 @@ def test_train_restart_resumes_identically(tmp_path):
 def test_rules_divisibility_fallback():
     # on the (1,1) smoke mesh every rule resolves to no-sharding; with an
     # abstract 16x16 mesh, a 12-head axis (doesn't divide 16) is dropped
-    from jax.sharding import AbstractMesh
+    from repro.launch.mesh import make_abstract_mesh
 
     rules = make_rules()
-    big = AbstractMesh((16, 16), ("data", "model"))
+    big = make_abstract_mesh((16, 16), ("data", "model"))
     assert rules.pspec(("heads", None), (12, 128), big) == \
         jax.sharding.PartitionSpec(None, None)
     assert rules.pspec(("heads", None), (32, 128), big) == \
