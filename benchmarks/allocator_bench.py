@@ -1,4 +1,5 @@
-"""Scheduler-throughput benchmark: per-grant (legacy) vs batched epoch path.
+"""Scheduler-throughput benchmark: per-grant (legacy) vs batched epoch vs
+device-resident fused epoch.
 
 Measures, per criterion x server-policy at several N (frameworks) x J
 (agents) scales on a synthetic heterogeneous cluster:
@@ -7,15 +8,31 @@ Measures, per criterion x server-policy at several N (frameworks) x J
     operation the simulator runs every ``alloc_interval``;
   * grants/sec within that epoch.
 
-The legacy path recomputes feasibility + scores before every grant
-(O(N*J*R) per grant); the batched path scores once per epoch and applies
-O((N+J)*R) incremental updates per grant (repro.core.engine.BatchedEpoch).
+Paths:
 
-Emits a JSON trajectory document (--out) plus a CSV block on stdout:
+  * ``pergrant``        — legacy path: full feasibility + score recompute
+                          before every grant, O(N*J*R) per grant;
+  * ``batched``         — numpy incremental epoch (BatchedEpoch): score once,
+                          O((N+J)*R) updates per grant;
+  * ``kernel-pergrant`` — the per-grant Pallas ``psdsf_argmin`` backend
+                          (rPS-DSF pooled only): one kernel launch + scalar
+                          readback per pick — the host<->device boundary cost
+                          the fused engine removes;
+  * ``device``          — the device-resident fused epoch
+                          (repro.core.engine_jax): the WHOLE epoch as one
+                          jitted ``lax.while_loop`` dispatch.
+
+Emits a JSON trajectory document (--out, default ``BENCH_allocator.json`` at
+the repo root) plus a CSV block on stdout:
 
     PYTHONPATH=src python -m benchmarks.allocator_bench
     PYTHONPATH=src python -m benchmarks.allocator_bench --big --reps 5
-    PYTHONPATH=src python -m benchmarks.allocator_bench --quick   # CI smoke
+    PYTHONPATH=src python -m benchmarks.allocator_bench --fleet  # 2000x1000
+    PYTHONPATH=src python -m benchmarks.allocator_bench --quick  # CI smoke
+
+The ``--quick`` smoke ASSERTS the ISSUE-3 acceptance bar: the fused device
+epoch is >= 5x faster than the per-grant kernel path at N=200 x J=100
+(characterized rPS-DSF + pooled).
 """
 from __future__ import annotations
 
@@ -28,9 +45,24 @@ import numpy as np
 
 from repro.core.online import OnlineAllocator
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_allocator.json")
+
 # demand/capacity values are multiples of 1/4 so every arithmetic path
-# (rebuild vs incremental) is binary-exact
+# (rebuild vs incremental, f64 vs f32) is binary-exact
 _AGENT_TYPES = [(16.0, 64.0), (32.0, 32.0), (24.0, 48.0), (64.0, 128.0)]
+
+#: which (criterion, policy) cells a path can serve
+def _covers(path: str, criterion: str, policy: str) -> bool:
+    if path == "kernel-pergrant":
+        return criterion == "rpsdsf" and policy == "pooled"
+    if path == "device":
+        return policy in ("pooled", "rrr")
+    return True
+
+
+_USE_KERNEL = {"pergrant": False, "batched": False,
+               "kernel-pergrant": "pergrant", "device": True}
 
 
 def _build(N: int, J: int, criterion: str, policy: str, seed: int = 0):
@@ -45,13 +77,22 @@ def _build(N: int, J: int, criterion: str, policy: str, seed: int = 0):
     return al
 
 
+def _run_epoch(al, path: str):
+    if path == "pergrant":
+        return al.allocate(per_agent_limit=1)
+    return al.allocate_batched(per_agent_limit=1,
+                               use_kernel=_USE_KERNEL[path])
+
+
 def _bench_epoch(N, J, criterion, policy, path: str, reps: int, seed: int = 0):
     """Median epoch latency (s) + grants for one offer cycle per agent."""
+    if path in ("kernel-pergrant", "device"):
+        _run_epoch(_build(N, J, criterion, policy, seed=seed), path)  # warm jit
     times, n_grants = [], 0
     for r in range(reps):
         al = _build(N, J, criterion, policy, seed=seed)
         t0 = time.perf_counter()
-        grants = al.allocate(per_agent_limit=1, batched=(path == "batched"))
+        grants = _run_epoch(al, path)
         times.append(time.perf_counter() - t0)
         n_grants = len(grants)
     t = float(np.median(times))
@@ -64,33 +105,57 @@ def _bench_epoch(N, J, criterion, policy, path: str, reps: int, seed: int = 0):
 
 
 def run(sizes=((50, 25), (200, 100)), criteria=("drf", "tsf", "psdsf", "rpsdsf"),
-        policies=("rrr", "pooled", "bestfit"), reps: int = 3,
+        policies=("rrr", "pooled", "bestfit"),
+        paths=("pergrant", "batched", "kernel-pergrant", "device"),
+        reps: int = 3, fleet: bool = False,
         out: str | None = None, print_csv: bool = True):
     rows = []
     for (N, J) in sizes:
         for crit in criteria:
             for pol in policies:
-                for path in ("pergrant", "batched"):
+                for path in paths:
+                    if not _covers(path, crit, pol):
+                        continue
                     rows.append(_bench_epoch(N, J, crit, pol, path, reps))
+    if fleet:
+        # the fleet point the host paths can't touch: device epoch only
+        rows.append(_bench_epoch(2000, 1000, "rpsdsf", "pooled", "device",
+                                 max(1, reps - 1)))
+        rows.append(_bench_epoch(2000, 1000, "drf", "rrr", "device",
+                                 max(1, reps - 1)))
+
+    def _pair(N, J, crit, pol):
+        return {r["path"]: r for r in rows
+                if (r["n_frameworks"], r["n_agents"]) == (N, J)
+                and r["criterion"] == crit and r["policy"] == pol}
+
     speedups = {}
     for (N, J) in sizes:
         for crit in criteria:
             for pol in policies:
-                pair = {r["path"]: r for r in rows
-                        if (r["n_frameworks"], r["n_agents"]) == (N, J)
-                        and r["criterion"] == crit and r["policy"] == pol}
-                speedups[f"{crit}/{pol}/N{N}xJ{J}"] = (
-                    pair["pergrant"]["epoch_s"] / max(pair["batched"]["epoch_s"], 1e-12)
-                )
+                pair = _pair(N, J, crit, pol)
+                key = f"{crit}/{pol}/N{N}xJ{J}"
+                if "pergrant" in pair and "batched" in pair:
+                    speedups[f"batched_over_pergrant/{key}"] = (
+                        pair["pergrant"]["epoch_s"]
+                        / max(pair["batched"]["epoch_s"], 1e-12))
+                if "device" in pair and "kernel-pergrant" in pair:
+                    speedups[f"device_over_kernel_pergrant/{key}"] = (
+                        pair["kernel-pergrant"]["epoch_s"]
+                        / max(pair["device"]["epoch_s"], 1e-12))
+                if "device" in pair and "pergrant" in pair:
+                    speedups[f"device_over_pergrant/{key}"] = (
+                        pair["pergrant"]["epoch_s"]
+                        / max(pair["device"]["epoch_s"], 1e-12))
     doc = {"bench": "allocator_epoch", "results": rows,
-           "epoch_speedup_batched_over_pergrant": speedups}
+           "epoch_speedups": speedups}
     if print_csv:
         print("criterion,policy,path,N,J,epoch_ms,grants,grants_per_s")
         for r in rows:
             print(f"{r['criterion']},{r['policy']},{r['path']},"
                   f"{r['n_frameworks']},{r['n_agents']},"
                   f"{r['epoch_s'] * 1e3:.2f},{r['grants']},{r['grants_per_s']:.0f}")
-        print("# epoch speedup (batched over per-grant):")
+        print("# epoch speedups:")
         for k, v in speedups.items():
             print(f"#   {k}: {v:.1f}x")
     if out:
@@ -102,21 +167,46 @@ def run(sizes=((50, 25), (200, 100)), criteria=("drf", "tsf", "psdsf", "rpsdsf")
     return doc
 
 
+def smoke(out: str | None):
+    """CI smoke: a small grid plus the ISSUE-3 acceptance cell, asserting
+    the fused epoch beats the per-grant kernel path by >= 5x."""
+    doc = run(sizes=((50, 25),), criteria=("drf", "rpsdsf"),
+              policies=("rrr", "pooled"),
+              paths=("pergrant", "batched", "device"), reps=1, out=None)
+    acc = run(sizes=((200, 100),), criteria=("rpsdsf",), policies=("pooled",),
+              paths=("batched", "kernel-pergrant", "device"), reps=1, out=None)
+    doc["results"] += acc["results"]
+    doc["epoch_speedups"].update(acc["epoch_speedups"])
+    key = "device_over_kernel_pergrant/rpsdsf/pooled/N200xJ100"
+    speedup = doc["epoch_speedups"][key]
+    assert speedup >= 5.0, (
+        f"fused device epoch must be >=5x over the per-grant kernel path, "
+        f"got {speedup:.1f}x")
+    print(f"# OK: device epoch {speedup:.1f}x over per-grant kernel "
+          f"(bar: 5x)")
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {out}")
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--big", action="store_true",
                     help="add a 1000x400 fleet-scale point")
+    ap.add_argument("--fleet", action="store_true",
+                    help="add the 2000x1000 device-only fleet point")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: one small size, one rep, two criteria")
-    ap.add_argument("--out", default="artifacts/bench/allocator_bench.json")
+                    help="CI smoke: small grid + the >=5x acceptance assert")
+    ap.add_argument("--out", default=_DEFAULT_OUT)
     args = ap.parse_args()
     if args.quick:
-        run(sizes=((50, 25),), criteria=("drf", "rpsdsf"),
-            policies=("rrr", "bestfit"), reps=1, out=args.out)
+        smoke(args.out)
         return
     sizes = [(50, 25), (200, 100)] + ([(1000, 400)] if args.big else [])
-    run(sizes=tuple(sizes), reps=args.reps, out=args.out)
+    run(sizes=tuple(sizes), reps=args.reps, fleet=args.fleet, out=args.out)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,12 @@ All cells run the incremental batched epoch engine (``batched=True``; the
 per-grant legacy path is available via ``--pergrant`` for comparison) —
 ``run_paper_experiment`` asserts engine parity on first use.
 
+Grid cells are independent (per-cell seeds, fresh workload instances), so
+``--jobs N`` fans them out over a process pool; every result row carries its
+own ``wall_s`` so the trajectory records per-cell cost either way.
+
     PYTHONPATH=src python -m benchmarks.scenario_sweep            # full grid
+    PYTHONPATH=src python -m benchmarks.scenario_sweep --jobs 8   # parallel
     PYTHONPATH=src python -m benchmarks.scenario_sweep --quick    # CI-sized
 
 Writes a JSON trajectory document to ``BENCH_scenarios.json`` at the repo
@@ -21,8 +26,10 @@ root (override with --out).
 from __future__ import annotations
 
 import argparse
+import concurrent.futures
 import json
 import os
+import time
 
 import numpy as np
 
@@ -68,18 +75,24 @@ def _downsample(t, v, max_points: int = 64):
     return t[idx].tolist(), v[idx].tolist()
 
 
-def _cell(workload_name, builder, criterion, policy, seed, batched):
+def _cell(workload_name, criterion, policy, seed, batched, quick):
+    """One grid cell.  Takes only picklable primitives (the workload builder
+    is re-resolved by name) so cells can run in worker processes."""
+    builder = _workload_builders(quick)[workload_name]
+    t0 = time.perf_counter()
     fair, slow = FairnessTimelineHook(), SlowdownHook()
     r = run_paper_experiment(
         criterion, "characterized", server_policy=policy, seed=seed,
         batched=batched, workload=builder(), hooks=[fair, slow],
     )
+    wall = time.perf_counter() - t0
     f = fair.summary()
     ts, js = _downsample(*fair.jain_series())
     return {
         "workload": workload_name, "criterion": criterion, "policy": policy,
         "seed": seed,
         "makespan": r.makespan,
+        "wall_s": wall,
         "used_cpu": r.mean_used(0), "used_mem": r.mean_used(1),
         "used_cpu_std": r.used_std(0),
         "jain_tw_mean": f["jain_tw_mean"], "jain_min": f["jain_min"],
@@ -90,11 +103,17 @@ def _cell(workload_name, builder, criterion, policy, seed, batched):
     }
 
 
+def _cell_star(args):
+    return _cell(*args)
+
+
 def run(criteria=None, policies=None, seeds=None, quick: bool = False,
-        batched: bool = True, out: str | None = None,
+        batched: bool = True, jobs: int = 1, out: str | None = None,
         print_csv: bool = True) -> dict:
     """``quick`` shrinks the grid (CI-sized) but never overrides an
-    explicitly passed criteria/policies/seeds."""
+    explicitly passed criteria/policies/seeds.  ``jobs > 1`` fans the
+    independent cells out over a process pool (per-cell seeds, fresh
+    workload instances — no shared state)."""
     if criteria is None:
         criteria = ("drf", "psdsf", "rpsdsf") if quick else \
             ("drf", "tsf", "psdsf", "rpsdsf")
@@ -103,28 +122,38 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
     if seeds is None:
         seeds = (0,) if quick else (0, 1)
     builders = _workload_builders(quick)
-    results = []
-    for wname, builder in builders.items():
-        for crit in criteria:
-            for pol in policies:
-                for seed in seeds:
-                    results.append(_cell(wname, builder, crit, pol, seed,
-                                         batched))
+    cells = [(wname, crit, pol, seed, batched, quick)
+             for wname in builders
+             for crit in criteria
+             for pol in policies
+             for seed in seeds]
+    t0 = time.perf_counter()
+    if jobs > 1:
+        with concurrent.futures.ProcessPoolExecutor(max_workers=jobs) as ex:
+            results = list(ex.map(_cell_star, cells))
+    else:
+        results = [_cell(*c) for c in cells]
+    sweep_wall = time.perf_counter() - t0
     doc = {
         "bench": "scenario_sweep",
         "engine": "batched" if batched else "pergrant",
+        "jobs": jobs,
+        "sweep_wall_s": sweep_wall,
         "grid": {"workloads": list(builders), "criteria": list(criteria),
                  "policies": list(policies), "seeds": list(seeds)},
         "results": results,
     }
     if print_csv:
         print("workload,criterion,policy,seed,makespan,used_cpu,"
-              "jain_tw,jain_min,worst_p95_slowdown")
+              "jain_tw,jain_min,worst_p95_slowdown,wall_s")
         for r in results:
             worst = max((g["p95"] for g in r["slowdown"].values()), default=0.0)
             print(f"{r['workload']},{r['criterion']},{r['policy']},{r['seed']},"
                   f"{r['makespan']:.1f},{r['used_cpu']:.3f},"
-                  f"{r['jain_tw_mean']:.3f},{r['jain_min']:.3f},{worst:.2f}")
+                  f"{r['jain_tw_mean']:.3f},{r['jain_min']:.3f},{worst:.2f},"
+                  f"{r['wall_s']:.2f}")
+        print(f"# {len(results)} cells in {sweep_wall:.1f}s "
+              f"(jobs={jobs})")
     if out:
         with open(out, "w") as f:
             json.dump(doc, f, indent=1)
@@ -139,10 +168,13 @@ def main():
                     help="CI-sized grid (3 criteria x 1 policy x 1 seed)")
     ap.add_argument("--pergrant", action="store_true",
                     help="legacy per-grant engine instead of batched epochs")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="run grid cells in parallel with N worker processes")
     ap.add_argument("--out", default=os.path.join(_REPO_ROOT,
                                                   "BENCH_scenarios.json"))
     args = ap.parse_args()
-    run(quick=args.quick, batched=not args.pergrant, out=args.out)
+    run(quick=args.quick, batched=not args.pergrant, jobs=args.jobs,
+        out=args.out)
 
 
 if __name__ == "__main__":

@@ -95,6 +95,17 @@ def residual_capacities(X, D, C, *, xp=_np):
     return C - used
 
 
+def feasible_mask(TD, FREE, allowed, wants, *, eps=1e-9, xp=_np):
+    """(N, J) one-more-task feasibility from true demands.
+
+    wants (N,) bool; allowed (N, J) bool; fits = every resource of the
+    demand bundle fits in the server's free vector (eps absorbs rounding).
+    Shared by the numpy batched epoch and the device-resident JAX epoch so
+    both layers apply the identical formula."""
+    fits = xp.all(TD[:, None, :] <= FREE[None, :, :] + eps, axis=-1)
+    return wants[:, None] & allowed & fits
+
+
 # ---------------------------------------------------------------------------
 # Criterion score functions
 # ---------------------------------------------------------------------------

@@ -33,6 +33,23 @@ from repro.core.policies import make_policy
 _KBIG = 3.0e38  # unsatisfiable-demand sentinel for the kernel backend
                 # (matches repro.kernels.psdsf_score BIG up to headroom)
 
+# lazily-bound kernel backend modules: importing them pulls in jax, which the
+# numpy path must never pay for (and the per-grant hot loop must not re-pay
+# the import machinery on every pick).
+_KOPS = None
+_JNP = None
+
+
+def _kernel_backend():
+    global _KOPS, _JNP
+    if _KOPS is None:
+        import jax.numpy as jnp
+
+        from repro.kernels.psdsf_score import ops
+
+        _KOPS, _JNP = ops, jnp
+    return _KOPS, _JNP
+
 
 class BatchedEpoch:
     """Incremental scorer + selector for one allocation epoch.
@@ -48,13 +65,18 @@ class BatchedEpoch:
         allocator's *inferred* demands when oblivious).
     usage : (N, R) aggregate held resources — only consulted for the
         oblivious DRF/TSF usage-share surrogate.
-    use_kernel : opt in to the fused Pallas ``psdsf_score`` scoring/argmin
-        backend.  Engaged only when it matches the numpy semantics:
-        characterized rPS-DSF + pooled policy + tie="low" + no placement
-        constraints (otherwise the numpy incremental path runs).  Intended
-        for large N x J fleets where the dense score/argmin is a real
-        kernel; tie-breaking across 128-wide tiles may differ from the
-        numpy path when scores are exactly equal.
+    use_kernel : opt in to the PER-GRANT Pallas ``psdsf_score``
+        scoring/argmin backend: one kernel launch + scalar readback per
+        pick, against device-resident mirrors of the kernel inputs that are
+        uploaded once per epoch and updated incrementally per grant.
+        Engaged only when it matches the numpy semantics: characterized
+        rPS-DSF + pooled policy + tie="low" + no placement constraints
+        (otherwise the numpy incremental path runs).  Tie-breaking across
+        128-wide tiles may differ from the numpy path when scores are
+        exactly equal.  For the fully fused alternative (whole epoch in one
+        dispatch, wider criterion/policy coverage) see
+        :mod:`repro.core.engine_jax` via
+        ``OnlineAllocator.allocate_batched(use_kernel=True)``.
     """
 
     def __init__(self, criterion, policy: str, *, X, D, C, FREE, phi, allowed,
@@ -95,15 +117,20 @@ class BatchedEpoch:
             self._kd = np.where((self.tot < self.wanted)[:, None],
                                 self.D, _KBIG)
             self._kres = self.cap.copy()
+            # device-resident mirrors of the kernel inputs: uploaded ONCE per
+            # epoch and updated in O(1)/O(R) per grant, so the per-grant path
+            # stops re-uploading O(N*R + J*R) floats on every pick.
+            _, jnp = _kernel_backend()
+            self._dev_tot = jnp.asarray(self.tot, jnp.float32)
+            self._dev_phi = jnp.asarray(self.phi, jnp.float32)
+            self._dev_kd = jnp.asarray(self._kd, jnp.float32)
+            self._dev_kres = jnp.asarray(self._kres, jnp.float32)
             self.policy = None
             return
         self.policy = make_policy(policy, J, rng, tie, bf_metric)
         self._init_scores()
-        wants = self.tot < self.wanted
-        self.feas = (
-            wants[:, None] & self.allowed
-            & (self.TD[:, None, :] <= self.FREE[None, :, :] + 1e-9).all(axis=-1)
-        )
+        self.feas = criteria.feasible_mask(
+            self.TD, self.FREE, self.allowed, self.tot < self.wanted)
 
     # -- scoring --------------------------------------------------------------
 
@@ -172,14 +199,14 @@ class BatchedEpoch:
         )
 
     def _select_kernel(self) -> Optional[tuple[int, int]]:
-        """Fused Pallas score+feasibility+argmin (rPS-DSF pooled)."""
-        from repro.kernels.psdsf_score.ops import psdsf_argmin
+        """Fused Pallas score+feasibility+argmin (rPS-DSF pooled).
 
-        import jax.numpy as jnp
-
-        _, n, j = psdsf_argmin(
-            jnp.asarray(self.tot, jnp.float32), jnp.asarray(self.phi, jnp.float32),
-            jnp.asarray(self._kd, jnp.float32), jnp.asarray(self._kres, jnp.float32),
+        Operates on the cached device mirrors (see ``__init__``); the only
+        host<->device traffic per pick is the scalar ``(n, j)`` readback
+        (the fully fused alternative is :mod:`repro.core.engine_jax`)."""
+        ops, _ = _kernel_backend()
+        _, n, j = ops.psdsf_argmin(
+            self._dev_tot, self._dev_phi, self._dev_kd, self._dev_kres,
         )
         n, j = int(n), int(j)
         if n < 0:
@@ -202,13 +229,19 @@ class BatchedEpoch:
             demand_changed = True
         if self.kernel:
             # masks ride on the kernel inputs: exhausted frameworks get an
-            # unsatisfiable demand row, blocked servers zero residuals.
+            # unsatisfiable demand row, blocked servers zero residuals.  Only
+            # the touched row/column moves host->device.
+            _, jnp = _kernel_backend()
             self.cap[j] = self.C[j] - self.X[:, j] @ self.D
             self._kres[j] = self.cap[j]
             if self.limit is not None and self.used[j] >= self.limit:
                 self._kres[j] = 0.0
+            self._dev_tot = self._dev_tot.at[n].add(float(n_units))
+            self._dev_kres = self._dev_kres.at[j].set(
+                jnp.asarray(self._kres[j], jnp.float32))
             if self.tot[n] >= self.wanted[n]:
                 self._kd[n] = _KBIG
+                self._dev_kd = self._dev_kd.at[n].set(_KBIG)
             return
         # feasibility: column j saw FREE change; row n may have hit `wanted`
         wants = self.tot < self.wanted

@@ -1,0 +1,504 @@
+"""Device-resident allocation epochs: the whole select -> grant -> refresh
+loop as ONE jitted ``lax.while_loop`` dispatch.
+
+The numpy :class:`repro.core.engine.BatchedEpoch` already made epoch scoring
+incremental, but its (opt-in) kernel backend still crossed the host<->device
+boundary per grant: one kernel launch, one blocking ``int(n)`` readback and a
+fresh upload of the score inputs for every single pick.  This module keeps
+the ENTIRE epoch on device: loop state ``(X, tot, FREE, cap, scores,
+feas-mask, used, RRR cursor)`` lives in device memory, each iteration selects
+the next (framework, server) pair, applies the grant and restores score /
+feasibility consistency with the same incremental formulas the numpy engine
+uses (via :mod:`repro.core.criteria` with ``xp=jax.numpy``), and the grant
+sequence ``(n_k, j_k)`` comes back in a single transfer when the loop ends.
+
+Coverage: characterized mode, ``tie="low"``, every criterion (DRF / TSF /
+PS-DSF / rPS-DSF) under the ``pooled`` and ``rrr`` server policies —
+including phi != 1 priorities, placement constraints, ``per_agent_limit``
+and mid-epoch exhaustion of ``wanted``.  Oblivious mode (inferred-demand
+drift) and best-fit stay on the host paths.
+
+Randomized round-robin on device
+--------------------------------
+RRR consumes server permutations.  The host wrapper pre-draws them from the
+SAME numpy Generator stream the numpy ``RRRPolicy`` would consume (the
+policy's only rng use under ``tie="low"`` is ``rng.permutation(J)``), so a
+single epoch's grant sequence is bit-for-bit comparable with the numpy
+engine.  The wrapper draws a fixed budget of permutations up front (the
+device loop cannot stop mid-epoch to ask for more), so ACROSS epochs the
+allocator rng advances further than the numpy path would — fused-vs-numpy
+stream parity is per-epoch, fused-vs-fused is exact.
+
+Tie-break semantics vs the numpy path
+-------------------------------------
+The numpy engine scores in float64 and treats scores within ``atol=1e-12``
+as tied, breaking ties toward the lowest (framework, server) index.  The
+device loop scores in float32, so it reproduces that rule with a scaled
+tolerance (``atol=1e-9 + 1e-6 * |min|``, a few f32 ULPs): exact rational
+ties (equal-score frameworks, the all-zeros epoch start) resolve to the
+same lowest index even when the two f32 score computations round
+differently.  The residual boundary: scores whose TRUE relative gap is
+below ~1e-6 are merged into a tie (numpy would order them), and above
+fleet-scale totals f32 rounding may reorder near-equal scores outright —
+bit-parity with the numpy engine is guaranteed on the parity suite's
+binary-exact instances and small totals, and is best-effort beyond that.
+Feasibility uses the numpy path's absolute ``eps`` against f32 ``FREE``
+arithmetic, which is exact for the paper's quantized (quarter-multiple)
+demand vectors; for non-dyadic demands the online allocator re-validates
+every fused grant in f64 before applying it.  With ``use_pallas=True``
+(strictly opt-in) the masked-argmin
+reductions run as Pallas kernels (``repro.kernels.psdsf_score``), which
+reduce per 128-wide tile and then across tile partials: the winner matches
+lexicographic order within one tile, but EXACT ties that straddle a tile
+boundary may resolve to a different (equal-score) pair than the numpy path
+— same caveat as the per-grant ``psdsf_argmin`` backend.  Keep the default
+jnp reductions when bit-parity with numpy matters at > 128-wide shapes.
+
+Shape bucketing: the host wrapper pads N and J up to powers of two (>= 8)
+and ``max_steps`` to a power-of-two bucket, so growing a fleet within its
+padded tile reuses the cached jit executable — a trace-count regression
+test pins this.  On non-CPU backends the mutated buffers are donated
+(``donate_argnums``) so XLA reuses the allocation across epochs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import criteria
+
+# plain python scalars: this module may be imported lazily while another
+# jit trace is active, so module level must not create jax values.
+_BIG = 3.0e38
+_IBIG = np.int32(2**31 - 1)
+
+#: incremented every time the epoch loop is (re)traced — the no-recompilation
+#: regression test asserts this stays flat across same-bucket epochs.
+TRACE_COUNT = 0
+#: incremented once per device dispatch by :func:`run_epoch` — the
+#: one-dispatch-per-epoch acceptance test reads this.
+DISPATCH_COUNT = 0
+
+COVERED_CRITERIA = ("drf", "tsf", "psdsf", "rpsdsf")
+COVERED_POLICIES = ("pooled", "rrr")
+
+
+def supports(criterion, policy: str, mode: str, tie: str) -> bool:
+    """Can the fused device epoch serve this configuration?"""
+    try:
+        name = criteria.get_criterion(criterion).name
+    except ValueError:
+        return False
+    return (name in COVERED_CRITERIA and policy in COVERED_POLICIES
+            and mode == "characterized" and tie == "low")
+
+
+def _argmin_tie_low(s, mask, rtol=1e-6, atol=1e-9):
+    """First index among near-minimal masked entries (numpy tie="low").
+
+    The tolerance covers a few f32 ULPs of rounding (~3.6e-7 relative for
+    the 2-3 flop score formulas), so mathematically-equal scores computed
+    through different factorizations still resolve to the numpy engine's
+    lowest-index winner; scores whose TRUE relative gap is below rtol are
+    merged too — that is the residual f32 parity boundary documented in
+    the module docstring."""
+    masked = jnp.where(mask, s.astype(jnp.float32), _BIG)
+    m = jnp.min(masked)
+    tol = atol + rtol * jnp.abs(m)
+    idx = jnp.arange(masked.shape[0], dtype=jnp.int32)
+    return jnp.min(jnp.where(masked <= m + tol, idx, _IBIG))
+
+
+class _EpochState(NamedTuple):
+    X: jax.Array        # (N, J) f32 allocation counts
+    tot: jax.Array      # (N,) f32
+    FREE: jax.Array     # (J, R) f32
+    cap: jax.Array      # (J, R) f32 residuals (rpsdsf) or (1, 1) dummy
+    dom: jax.Array      # (N, J) f32 dominant shares (psdsf family) or (1, 1)
+    s: jax.Array        # (N,) or (N, J) f32 criterion scores
+    feas: jax.Array     # (N, J) bool
+    used: jax.Array     # (J,) i32 grants per server this epoch
+    pidx: jax.Array     # () i32 RRR permutation cursor
+    pos: jax.Array      # () i32 RRR position within the round
+    count: jax.Array    # () i32 grants so far
+    ns: jax.Array       # (max_steps,) i32 grant sequence (frameworks)
+    js: jax.Array       # (max_steps,) i32 grant sequence (servers)
+
+
+def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
+               pidx0, pos0, j_real, limit, eps, *, kind: str, policy: str,
+               lookahead: bool, use_limit: bool, use_pallas: bool,
+               interpret: bool, max_steps: int):
+    """Traceable core: run one allocation epoch entirely under lax control
+    flow.  Returns ``(ns, js, count, X, tot, FREE, used, pidx, pos)``.
+
+    All array arguments may be padded; padded frameworks must carry
+    ``wanted == 0`` / ``allowed == False`` and padded servers ``FREE == 0``
+    so they are infeasible by construction.  ``j_real`` is the number of
+    REAL servers (RRR round length); ``perms`` is a (K, J) stack of server
+    permutations consumed by RRR starting at row ``pidx0`` / position
+    ``pos0`` (rows beyond the budget repeat the last — the host wrapper
+    detects that from the returned ``pidx`` and re-runs with a bigger
+    budget, see :func:`run_epoch`).
+    """
+    global TRACE_COUNT
+    TRACE_COUNT += 1
+    f32 = jnp.float32
+    X = X.astype(f32)
+    D = D.astype(f32)
+    TD = TD.astype(f32)
+    C = C.astype(f32)
+    FREE = FREE.astype(f32)
+    phi = phi.astype(f32)
+    wanted = wanted.astype(f32)
+    N, J = X.shape
+    la = f32(1.0 if lookahead else 0.0)
+    tot = jnp.sum(X, axis=1)
+    server_specific = kind in ("psdsf", "rpsdsf")
+
+    # -- X-independent score pieces (computed once per dispatch) ------------
+    if kind == "drf":
+        unit = criteria.drf_dominant(D, C, xp=jnp)            # (N,)
+        s0 = (tot + la) * unit / phi
+        cap0 = jnp.zeros((1, 1), f32)
+        dom0 = jnp.zeros((1, 1), f32)
+    elif kind == "tsf":
+        monopoly = criteria.tsf_monopoly(D, C, allowed=allowed, xp=jnp)
+        denom = phi * jnp.maximum(monopoly, 1e-30)            # (N,)
+        s0 = (tot + la) / denom
+        cap0 = jnp.zeros((1, 1), f32)
+        dom0 = jnp.zeros((1, 1), f32)
+    elif kind == "psdsf":
+        dom0 = criteria.virtual_dominant(D, C, xp=jnp)        # (N, J)
+        s0 = ((tot + la) / phi)[:, None] * dom0
+        cap0 = jnp.zeros((1, 1), f32)
+    elif kind == "rpsdsf":
+        cap0 = criteria.residual_capacities(X, D, C, xp=jnp)  # (J, R)
+        dom0 = criteria.virtual_dominant(D, cap0, xp=jnp)     # (N, J)
+        s0 = ((tot + la) / phi)[:, None] * dom0
+    else:
+        raise ValueError(f"unsupported criterion kind {kind!r}")
+
+    feas0 = criteria.feasible_mask(TD, FREE, allowed, tot < wanted,
+                                   eps=eps, xp=jnp)
+    if use_limit:
+        feas0 = feas0 & (used < limit)[None, :]
+
+    if use_pallas:
+        from repro.kernels.psdsf_score.kernel import (
+            masked_argmin1d_tiles, masked_argmin2d_tiles)
+        from repro.kernels.psdsf_score.ops import _block
+
+        bn = _block(N, 128)
+        bj = _block(J, 128)
+
+    def _argmin1d(vec, ok):
+        """Masked argmin over a vector (RRR visit / global criterion)."""
+        if use_pallas and N % bn == 0:
+            mins, args = masked_argmin1d_tiles(
+                vec.astype(f32), ok.astype(jnp.int32), bn=bn,
+                interpret=interpret)
+            k = jnp.argmin(mins)
+            return args[k]
+        return _argmin_tie_low(vec, ok)
+
+    def _argmin2d(mat, ok):
+        """Masked argmin over the (N, J) score matrix (pooled)."""
+        if use_pallas and N % bn == 0 and J % bj == 0:
+            mins, args = masked_argmin2d_tiles(
+                mat.astype(f32), ok.astype(jnp.int32), bn=bn, bj=bj,
+                interpret=interpret)
+            k = jnp.argmin(mins.reshape(-1))
+            enc = args.reshape(-1)[k]
+            return enc // J, enc % J
+        flat = _argmin_tie_low(mat.reshape(-1), ok.reshape(-1))
+        return flat // J, flat % J
+
+    def _select(st: _EpochState):
+        if policy == "pooled":
+            if server_specific:
+                return _argmin2d(st.s, st.feas) + (st.pidx, st.pos)
+            row_ok = jnp.any(st.feas, axis=1)
+            n = _argmin1d(st.s, row_ok)
+            j = jnp.min(jnp.where(st.feas[n],
+                                  jnp.arange(J, dtype=jnp.int32), _IBIG))
+            return n, j, st.pidx, st.pos
+        # rrr: visit the first feasible server at-or-after `pos` in the
+        # current round's permutation; wrap to a fresh permutation when the
+        # remainder of the round has nothing feasible.  A grant at the LAST
+        # position of a round also consumes a fresh permutation — both rules
+        # mirror the numpy RRRPolicy's rng consumption exactly.
+        K = perms.shape[0]
+        arangeJ = jnp.arange(J, dtype=jnp.int32)
+        perm = perms[jnp.minimum(st.pidx, K - 1)]
+        rank = jnp.zeros(J, jnp.int32).at[perm].set(arangeJ)
+        server_ok = jnp.any(st.feas, axis=0)
+        ahead = server_ok & (rank >= st.pos)
+        wrap = ~jnp.any(ahead)
+        perm2 = perms[jnp.minimum(st.pidx + 1, K - 1)]
+        rank2 = jnp.zeros(J, jnp.int32).at[perm2].set(arangeJ)
+        eff_rank = jnp.where(wrap, rank2, rank)
+        eff_ok = jnp.where(wrap, server_ok, ahead)
+        j = jnp.argmin(jnp.where(eff_ok, eff_rank, _IBIG))
+        col = st.s[:, j] if server_specific else st.s
+        n = _argmin1d(col, st.feas[:, j])
+        krank = eff_rank[j]
+        last = krank == j_real - 1
+        pidx = st.pidx + wrap.astype(jnp.int32) + last.astype(jnp.int32)
+        pos = jnp.where(last, 0, krank + 1)
+        return n, j, pidx, pos
+
+    def _refresh(st: _EpochState, n, j):
+        """Post-grant score refresh — the incremental formulas of the numpy
+        BatchedEpoch, row n (and column j under rPS-DSF) only."""
+        xt_n = st.tot[n] + la
+        if kind == "drf":
+            return st.cap, st.dom, st.s.at[n].set(xt_n * unit[n] / phi[n])
+        if kind == "tsf":
+            return st.cap, st.dom, st.s.at[n].set(xt_n / denom[n])
+        if kind == "psdsf":
+            return st.cap, st.dom, st.s.at[n].set(xt_n / phi[n] * dom0[n])
+        # rpsdsf: only server j's residual changed -> refresh column j,
+        # then row n (its total changed).
+        cap_j = C[j] - st.X[:, j] @ D                       # (R,)
+        cap = st.cap.at[j].set(cap_j)
+        dom_col = criteria.virtual_dominant(D, cap_j[None, :], xp=jnp)[:, 0]
+        dom = st.dom.at[:, j].set(dom_col)
+        xt = st.tot + la
+        s = st.s.at[:, j].set(xt / phi * dom[:, j])
+        s = s.at[n].set(xt_n / phi[n] * dom[n])
+        return cap, dom, s
+
+    def cond(st: _EpochState):
+        return jnp.any(st.feas) & (st.count < max_steps)
+
+    def body(st: _EpochState):
+        n, j, pidx, pos = _select(st)
+        bundle = TD[n]                                      # (R,)
+        X2 = st.X.at[n, j].add(1.0)
+        tot2 = st.tot.at[n].add(1.0)
+        FREE2 = st.FREE.at[j].add(-bundle)
+        used2 = st.used.at[j].add(1)
+        st2 = st._replace(X=X2, tot=tot2, FREE=FREE2, used=used2)
+        # feasibility: column j saw FREE change; row n may have hit `wanted`
+        wants = tot2 < wanted
+        col = wants & allowed[:, j] & jnp.all(TD <= FREE2[j][None, :] + eps,
+                                              axis=1)
+        if use_limit:
+            col = col & (used2[j] < limit)
+        feas = st.feas.at[:, j].set(col)
+        feas = jnp.where((jnp.arange(X2.shape[0]) == n)[:, None] & ~wants[n],
+                         False, feas)
+        cap, dom, s = _refresh(st2, n, j)
+        return _EpochState(
+            X=X2, tot=tot2, FREE=FREE2, cap=cap, dom=dom, s=s, feas=feas,
+            used=used2, pidx=pidx, pos=pos, count=st.count + 1,
+            ns=st.ns.at[st.count].set(n.astype(jnp.int32)),
+            js=st.js.at[st.count].set(j.astype(jnp.int32)),
+        )
+
+    init = _EpochState(
+        X=X, tot=tot, FREE=FREE, cap=cap0, dom=dom0, s=s0, feas=feas0,
+        used=used.astype(jnp.int32), pidx=jnp.asarray(pidx0, jnp.int32),
+        pos=jnp.asarray(pos0, jnp.int32), count=jnp.int32(0),
+        ns=jnp.full((max_steps,), -1, jnp.int32),
+        js=jnp.full((max_steps,), -1, jnp.int32),
+    )
+    fin = jax.lax.while_loop(cond, body, init)
+    return (fin.ns, fin.js, fin.count, fin.X, fin.tot, fin.FREE, fin.used,
+            fin.pidx, fin.pos)
+
+
+_STATIC = ("kind", "policy", "lookahead", "use_limit", "use_pallas",
+           "interpret", "max_steps")
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(donate: bool):
+    if donate:
+        # X (0), FREE (4) and used (9) are the mutated buffers: donating
+        # them lets XLA reuse the epoch-state allocation across epochs.
+        return jax.jit(epoch_loop, static_argnames=_STATIC,
+                       donate_argnums=(0, 4, 9))
+    return jax.jit(epoch_loop, static_argnames=_STATIC)
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power of two >= max(n, lo) — the jit-cache shape bucket (the
+    same rounding rule the kernel wrappers use for tiles)."""
+    from repro.kernels.psdsf_score.ops import next_pow2
+
+    return next_pow2(n, lo)
+
+
+def _pad(a, n, axis, value):
+    pad = n - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return np.pad(a, widths, constant_values=value)
+
+
+def grant_bound(TD, FREE, tot, wanted, per_agent_limit=None) -> int:
+    """Upper bound on grants this epoch (sizes the device-side sequence).
+
+    Every grant consumes at least ``min_n max_r TD[n, r]`` units of SOME
+    resource on its server, so server j can absorb at most
+    ``sum_r FREE[j, r] / that`` grants; the total is additionally capped by
+    the outstanding wanted deficit and by J * per_agent_limit.  The
+    wanted/limit caps apply even when a degenerate zero-demand framework
+    voids the capacity argument."""
+    wants = tot < wanted
+    if not wants.any():
+        return 0
+    deficit = float(np.sum(wanted[wants] - tot[wants]))
+    bound = int(min(deficit, 2**30))
+    dmin = float(np.max(TD[wants], axis=1).min())
+    if dmin > 0:
+        bound = min(bound,
+                    int(np.ceil(np.sum(np.maximum(FREE, 0.0)) / dmin)))
+    if per_agent_limit is not None:
+        bound = min(bound, FREE.shape[0] * int(per_agent_limit))
+    return max(bound, 1)
+
+
+def run_epoch(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
+              wanted, true_demands, per_agent_limit: Optional[int] = None,
+              lookahead: bool = False, rng: Optional[np.random.Generator] = None,
+              eps: float = 1e-9, use_pallas: bool = False,
+              max_steps_cap: int = 16384,
+              _perm_rows: Optional[int] = None) -> list[tuple[int, int]]:
+    """Run one allocation epoch on device; returns the grant sequence.
+
+    Host-side wrapper around :func:`epoch_loop`: pads to power-of-two shape
+    buckets (cached jit executables), pre-draws RRR permutations from the
+    shared numpy rng, dispatches ONCE, and transfers the grant sequence
+    back in one readback.  If the conservative :func:`grant_bound` exceeds
+    ``max_steps_cap`` the epoch is chained over several dispatches (the
+    returned sequence is still a single flat list; the RRR round cursor and
+    permutation stack carry across the chain, so the sequence is identical
+    to a single uncapped dispatch).
+
+    ``use_pallas`` is strictly opt-in: the Pallas masked-argmin reductions
+    resolve EXACT-tie winners without the f32 tie tolerance the jnp path
+    applies (see the module docstring), so keep it off when bit-parity with
+    the numpy engine matters.
+    """
+    global DISPATCH_COUNT
+    crit = criteria.get_criterion(criterion)
+    kind = crit.name
+    if kind not in COVERED_CRITERIA or policy not in COVERED_POLICIES:
+        raise ValueError(f"fused epoch does not cover {kind}/{policy}")
+    interpret = jax.default_backend() == "cpu"
+    # donation invalidates the input buffers, but the RRR grow-and-replay
+    # path must be able to re-run a dispatch with the same state arrays —
+    # so only the replay-free pooled policy donates.
+    donate = jax.default_backend() != "cpu" and policy != "rrr"
+
+    X = np.asarray(X, np.float64)
+    D = np.asarray(D, np.float64)
+    TD = np.asarray(true_demands, np.float64)
+    C = np.asarray(C, np.float64)
+    FREE = np.array(FREE, np.float64)
+    phi = np.asarray(phi, np.float64)
+    wanted = np.asarray(wanted, np.float64)
+    allowed = np.asarray(allowed, bool)
+    N, J = X.shape
+    R = D.shape[1]
+    tot = X.sum(axis=1)
+
+    bound = grant_bound(TD, FREE, tot, wanted, per_agent_limit)
+    if bound == 0:
+        return []
+    Np, Jp = _bucket(N), _bucket(J)
+    limit = np.int32(per_agent_limit if per_agent_limit is not None else 0)
+    use_limit = per_agent_limit is not None
+
+    Xp = _pad(_pad(X, Np, 0, 0.0), Jp, 1, 0.0)
+    Dp = _pad(D, Np, 0, 0.0)
+    TDp = _pad(TD, Np, 0, 0.0)
+    Cp = _pad(C, Jp, 0, 0.0)
+    FREEp = _pad(FREE, Jp, 0, 0.0)
+    phip = _pad(phi, Np, 0, 1.0)
+    wantedp = _pad(wanted, Np, 0, 0.0)       # padded frameworks want nothing
+    allowedp = _pad(_pad(allowed, Np, 0, False), Jp, 1, False)
+    usedp = np.zeros(Jp, np.int32)
+
+    def _draw_perms(k: int) -> np.ndarray:
+        """k permutation rows from the shared rng stream, padded to Jp."""
+        rows = np.empty((k, Jp), np.int32)
+        for i in range(k):
+            rows[i, :J] = rng.permutation(J)
+            rows[i, J:] = np.arange(J, Jp)
+        return rows
+
+    if policy == "rrr":
+        if rng is None:
+            raise ValueError("fused RRR epoch needs the allocator rng")
+        # optimistic budget: one permutation per round of ~J grants plus
+        # wrap slack, sized for one dispatch segment (the stack persists
+        # across chained segments and grows on demand).  The worst case is
+        # 2 per grant (every grant at the round's last position after a
+        # wrap), so if the loop reports its cursor ran PAST the stack we
+        # APPEND more rows — drawing more continues the rng stream, the
+        # already-drawn prefix is unchanged — and re-run the dispatch.
+        # pow2-bucket the stack height so growing `bound` within a bucket
+        # cannot retrace the loop (perms shape is part of the jit key);
+        # _perm_rows is a test hook that forces the grow-and-replay path.
+        seg = min(bound, max_steps_cap)
+        perms = _draw_perms(_perm_rows if _perm_rows is not None
+                            else _bucket(4 + 4 * ((seg + J - 1) // J)))
+    else:
+        perms = np.arange(Jp, dtype=np.int32)[None, :]
+
+    fn = _jitted(donate)
+    f32 = jnp.float32
+    # constant inputs upload once; the mutable state arrays stay on device
+    # across chained segments (only the grant sequence is read back).
+    dD, dTD, dC = jnp.asarray(Dp, f32), jnp.asarray(TDp, f32), jnp.asarray(Cp, f32)
+    dphi, dwanted = jnp.asarray(phip, f32), jnp.asarray(wantedp, f32)
+    dallowed = jnp.asarray(allowedp)
+    X_cur = jnp.asarray(Xp, f32)
+    FREE_cur = jnp.asarray(FREEp, f32)
+    used_cur = jnp.asarray(usedp)
+
+    out: list[tuple[int, int]] = []
+    remaining = bound
+    pidx = pos = 0
+    while remaining > 0:
+        max_steps = _bucket(min(remaining, max_steps_cap), lo=16)
+        while True:
+            DISPATCH_COUNT += 1
+            ns, js, count, Xd, totd, FREEd, usedd, pidx_d, pos_d = fn(
+                X_cur, dD, dTD, dC, FREE_cur, dphi, dwanted, dallowed,
+                jnp.asarray(perms), used_cur,
+                np.int32(pidx), np.int32(pos),
+                jnp.int32(J), limit, jnp.float32(eps),
+                kind=kind, policy=policy, lookahead=lookahead,
+                use_limit=use_limit, use_pallas=use_pallas,
+                interpret=interpret, max_steps=max_steps,
+            )
+            # a clamped permutation read implies the final cursor ran past
+            # the stack (every used row index is <= the final pidx), so
+            # ending ON the last row is still exact — only pidx >= K is
+            # tainted: grow the stack (stream-append) and replay.
+            if policy != "rrr" or int(pidx_d) < perms.shape[0]:
+                break
+            perms = np.concatenate([perms, _draw_perms(perms.shape[0])])
+        k = int(count)
+        ns = np.asarray(ns[:k])
+        js = np.asarray(js[:k])
+        out.extend(zip(ns.tolist(), js.tolist()))
+        if k < max_steps:
+            break
+        # overflow: chain another dispatch from the final DEVICE state
+        # (incl. the RRR cursor, so the chain equals one long epoch)
+        X_cur, FREE_cur, used_cur = Xd, FREEd, usedd
+        pidx, pos = int(pidx_d), int(pos_d)
+        remaining -= k
+    return out

@@ -10,7 +10,13 @@ the fused Pallas version of the inner score/argmin).
 Criterion scores come from :mod:`repro.core.criteria` with ``xp=jax.numpy``
 — the SAME formulas the numpy reference and the online allocator use; this
 module owns only the lax control flow (while-loop, RRR permutation state,
-masked argmin).
+masked argmin).  The deterministic (``tie="low"``) pooled path delegates to
+the shared device-resident epoch loop
+(:func:`repro.core.engine_jax.epoch_loop`) — one incremental-refresh
+while-loop serves both progressive filling and the online allocator's fused
+epochs; RRR, random-tie and best-fit keep the full-recompute body below
+(RRR because it draws permutations in-loop rather than from a pre-drawn
+stack).
 
 Semantics match the reference engine:
   * one task granted per step;
@@ -93,6 +99,33 @@ def progressive_fill_jax(
         allowed = jnp.asarray(allowed, bool)
 
     x_init = jnp.zeros((N, J), jnp.int32) if x0 is None else x0.astype(jnp.int32)
+
+    if tie == "low" and pol == POL_POOLED:
+        # deterministic pooled select: reuse the device-resident epoch loop
+        # (same incremental score/feasibility refresh the online allocator
+        # fuses).  RRR stays on the legacy body below: it draws a fresh
+        # permutation IN the loop whenever a round wraps, whereas the fused
+        # loop consumes a pre-drawn stack — a fill-to-exhaustion tail can
+        # wrap on nearly every grant, and inside jit there is no way to
+        # grow the stack the way engine_jax.run_epoch replays on the host.
+        from repro.core import engine_jax
+
+        Xf = x_init.astype(jnp.float32)
+        FREE = criteria.residual_capacities(Xf, D, C, xp=jnp)
+        perms = jnp.arange(J, dtype=jnp.int32)[None, :]
+        allowed_m = (jnp.ones((N, J), bool) if allowed is None else allowed)
+        _ns, _js, _cnt, x_fin, *_rest = engine_jax.epoch_loop(
+            Xf, D, D, C, FREE, phi,
+            jnp.full((N,), 3.0e38, jnp.float32),      # no wanted caps
+            allowed_m, perms, jnp.zeros(J, jnp.int32),
+            jnp.int32(0), jnp.int32(0),
+            jnp.int32(J), jnp.int32(0), jnp.float32(1e-6),
+            kind=crit.name, policy=policy, lookahead=lookahead,
+            use_limit=False, use_pallas=False, interpret=False,
+            max_steps=max_steps,
+        )
+        return x_fin.astype(jnp.int32)
+
     key, pk = jax.random.split(key)
     state = FillState(
         x=x_init,

@@ -240,7 +240,7 @@ class OnlineAllocator:
     # -- allocation epoch ----------------------------------------------------
 
     def allocate(self, per_agent_limit: Optional[int] = None,
-                 batched: bool = False) -> list[Grant]:
+                 batched: bool = False, use_kernel=False) -> list[Grant]:
         """Run one allocation epoch; returns grants.
 
         per_agent_limit models Mesos's offer cycle: each agent's resources are
@@ -251,9 +251,12 @@ class OnlineAllocator:
         batched=True uses the incremental :class:`BatchedEpoch` engine with
         the shared server-policy objects (reference-filler semantics for RRR
         rounds); batched=False keeps the legacy per-grant offer semantics.
+        use_kernel=True additionally opts the batched path into the
+        device-resident JAX epoch (see :meth:`allocate_batched`).
         """
         if batched:
-            return self.allocate_batched(per_agent_limit)
+            return self.allocate_batched(per_agent_limit,
+                                         use_kernel=use_kernel)
         grants: list[Grant] = []
         used: dict[str, int] = {}
         guard = 0
@@ -272,12 +275,25 @@ class OnlineAllocator:
             grants.append(g)
 
     def allocate_batched(self, per_agent_limit: Optional[int] = None,
-                         tie: str = "low", use_kernel: bool = False) -> list[Grant]:
+                         tie: str = "low", use_kernel=False) -> list[Grant]:
         """Batched epoch: score once, grant many (see module docstring).
 
-        ``use_kernel=True`` opts into the fused Pallas ``psdsf_score``
-        backend for characterized rPS-DSF + pooled selection at large N x J
-        (silently falls back to the numpy incremental path otherwise)."""
+        ``use_kernel`` selects the accelerator backend:
+
+          * ``True`` / ``"fused"`` — the device-resident epoch engine
+            (:mod:`repro.core.engine_jax`): the whole select -> grant ->
+            refresh loop runs as ONE jitted ``lax.while_loop`` dispatch.
+            Covers characterized mode, ``tie="low"``, every criterion under
+            the pooled/rrr policies (phi, constraints, per_agent_limit
+            included); anything else silently falls back to the numpy
+            incremental path.  Fused RRR pre-draws its server permutations
+            from the allocator rng (see the engine_jax module docstring for
+            the cross-epoch rng-stream caveat).
+          * ``"pergrant"`` — the legacy per-grant Pallas ``psdsf_score``
+            backend (one kernel launch + readback per pick; characterized
+            rPS-DSF + pooled only), kept for benchmarking the boundary cost.
+          * ``False`` — pure numpy incremental epoch (default).
+        """
         if not self.frameworks or self.state.n_agents == 0:
             return []
         view = self.state.sorted_view()
@@ -287,6 +303,29 @@ class OnlineAllocator:
             fw = self.frameworks[f]
             if fw.n_tasks < fw.wanted_tasks:
                 TD[i] = self._true_demand(f)
+        if use_kernel in (True, "fused"):
+            from repro.core import engine_jax
+
+            if engine_jax.supports(self.crit, self.server_policy,
+                                   self.mode, tie):
+                seq = engine_jax.run_epoch(
+                    self.crit, self.server_policy,
+                    X=view.X, D=view.D, C=view.C, FREE=view.FREE,
+                    phi=view.phi, allowed=view.allowed, wanted=view.wanted,
+                    true_demands=TD, per_agent_limit=per_agent_limit,
+                    lookahead=False, rng=self.rng,
+                )
+                grants = []
+                for n, j in seq:
+                    # re-validate in f64 before mutating host state: the
+                    # device loop tracks FREE in f32, which is exact for
+                    # quantized demands but can drift for non-dyadic ones —
+                    # never let a drifted grant drive free capacity negative.
+                    slot = self.state.agent2slot[view.agents[j]]
+                    if (TD[n] > self.state.FREE[slot] + 1e-9).any():
+                        break
+                    grants.append(self._grant(view.fids[n], view.agents[j]))
+                return grants
         usage = None
         if self.mode == "oblivious":
             usage = np.array([self.frameworks[f].usage for f in view.fids])
@@ -296,7 +335,7 @@ class OnlineAllocator:
             allowed=view.allowed, wanted=view.wanted, true_demands=TD,
             mode=self.mode, lookahead=False, tie=tie, rng=self.rng,
             bf_metric=self.bf_metric, per_agent_limit=per_agent_limit,
-            usage=usage, use_kernel=use_kernel,
+            usage=usage, use_kernel=bool(use_kernel),
         )
         grants: list[Grant] = []
         passes_d = self.crit.server_specific and self.mode == "oblivious"

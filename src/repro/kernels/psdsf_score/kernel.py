@@ -15,6 +15,18 @@ size #tiles only.
 
 Tiling: grid (N/BN, J/BJ); the R axis (<= 8 resources) is unrolled in
 registers, so tiles are clean (BN, BJ) = (128, 128) VPU shapes.
+
+Beyond the fully-fused rPS-DSF+pooled reduction, the family also covers the
+other criterion x policy combinations of the device-resident epoch engine
+(:mod:`repro.core.engine_jax`), which maintains scores/feasibility
+incrementally and only needs the masked reductions:
+
+  * ``masked_argmin1d_tiles`` — masked argmin over a score VECTOR: an RRR
+    server visit (score column of the visited server) or DRF/TSF selection
+    (server-agnostic scores broadcast against row feasibility);
+  * ``masked_argmin2d_tiles`` — masked argmin over a maintained (N, J) score
+    MATRIX: pooled selection for the PS-DSF family without recomputing
+    scores from demands.
 """
 from __future__ import annotations
 
@@ -55,6 +67,102 @@ def _score_tile_kernel(x_ref, phi_ref, d_ref, res_ref, min_ref, arg_ref, *,
     lj = idx % bj
     min_ref[0, 0] = flat[idx]
     arg_ref[0, 0] = (i * bn + ln) * jnp.int32(pl.num_programs(1) * bj) + (j * bj + lj)
+
+
+def _masked_argmin1d_kernel(s_ref, ok_ref, min_ref, arg_ref, *, bn: int):
+    """One (BN, 1) tile of a masked 1-D argmin (scores + validity mask).
+
+    Serves two widened coverage cases of the fused allocator loop:
+      * an RRR server visit — the visited server's score column s[:, j]
+        masked by its feasibility column;
+      * DRF/TSF selection — the server-agnostic (N,) score vector broadcast
+        against row-level feasibility (does framework n fit ANYWHERE).
+    """
+    i = pl.program_id(0)
+    s = s_ref[...][:, 0]                      # (BN,)
+    ok = ok_ref[...][:, 0] != 0
+    masked = jnp.where(ok, s, BIG)
+    idx = jnp.argmin(masked)
+    min_ref[0, 0] = masked[idx]
+    arg_ref[0, 0] = i * bn + idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def masked_argmin1d_tiles(s, ok, *, bn: int = 128, interpret: bool = False):
+    """-> (tile_mins (tn,), tile_args (tn,)).  s (N,) f32, ok (N,) mask;
+    N % bn == 0.  Masked-out and padding entries must carry ok == 0."""
+    N = s.shape[0]
+    assert N % bn == 0, (N, bn)
+    tn = N // bn
+    kernel = functools.partial(_masked_argmin1d_kernel, bn=bn)
+    mins, args = pl.pallas_call(
+        kernel,
+        grid=(tn,),
+        in_specs=[
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((tn, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s[:, None].astype(jnp.float32), ok[:, None].astype(jnp.int32))
+    return mins[:, 0], args[:, 0]
+
+
+def _masked_argmin2d_kernel(s_ref, feas_ref, min_ref, arg_ref, *,
+                            bn: int, bj: int):
+    """One (BN, BJ) tile of a masked 2-D argmin over a maintained score
+    matrix (pooled selection for server-specific criteria: the incremental
+    engine keeps s and feas consistent; this kernel only reduces them)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    s = s_ref[...]
+    feas = feas_ref[...] != 0
+    masked = jnp.where(feas, s, BIG)
+    flat = masked.reshape(-1)
+    idx = jnp.argmin(flat)
+    ln = idx // bj
+    lj = idx % bj
+    min_ref[0, 0] = flat[idx]
+    arg_ref[0, 0] = (i * bn + ln) * jnp.int32(pl.num_programs(1) * bj) + (j * bj + lj)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bj", "interpret"))
+def masked_argmin2d_tiles(s, feas, *, bn: int = 128, bj: int = 128,
+                          interpret: bool = False):
+    """-> (tile_mins (tn, tj), tile_args (tn, tj)); args encode n*Jpad + j.
+
+    s (N, J) f32 scores, feas (N, J) mask; N % bn == 0, J % bj == 0.
+    Cross-tile exact ties resolve in row-major TILE order, which coincides
+    with lexicographic (n, j) order only within a single 128-wide tile —
+    same caveat as ``psdsf_argmin_tiles``."""
+    N, J = s.shape
+    assert N % bn == 0 and J % bj == 0, (N, J, bn, bj)
+    tn, tj = N // bn, J // bj
+    kernel = functools.partial(_masked_argmin2d_kernel, bn=bn, bj=bj)
+    return pl.pallas_call(
+        kernel,
+        grid=(tn, tj),
+        in_specs=[
+            pl.BlockSpec((bn, bj), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bj), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tn, tj), jnp.float32),
+            jax.ShapeDtypeStruct((tn, tj), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s.astype(jnp.float32), feas.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bj", "interpret"))

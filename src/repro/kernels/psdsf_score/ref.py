@@ -1,9 +1,30 @@
-"""Pure-jnp oracle for the PS-DSF scoring/argmin kernel."""
+"""Pure-jnp oracles for the allocator kernel family (PS-DSF scoring/argmin
+plus the masked 1-D/2-D argmin reductions)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 BIG = 3.4e38
+
+
+def masked_argmin1d_ref(s, ok):
+    """-> (min_value, i) over ok entries; (BIG, -1) if none."""
+    masked = jnp.where(ok, s.astype(jnp.float32), BIG)
+    i = jnp.argmin(masked)
+    val = masked[i]
+    return val, jnp.where(val >= BIG, -1, i).astype(jnp.int32)
+
+
+def masked_argmin2d_ref(s, feas):
+    """-> (min_value, n, j) over feasible pairs; (BIG, -1, -1) if none."""
+    masked = jnp.where(feas, s.astype(jnp.float32), BIG)
+    flat = masked.reshape(-1)
+    idx = jnp.argmin(flat)
+    J = s.shape[1]
+    val = flat[idx]
+    n = jnp.where(val >= BIG, -1, idx // J)
+    j = jnp.where(val >= BIG, -1, idx % J)
+    return val, n.astype(jnp.int32), j.astype(jnp.int32)
 
 
 def psdsf_argmin_ref(x, phi, d, res):

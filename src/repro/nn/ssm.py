@@ -176,8 +176,14 @@ def rwkv6_apply(params, cfg: ModelConfig, x, chunked=True, state=None):
     fn = wkv6_chunked if chunked else wkv6_scan
     y, s_end = fn(r, k, v, logw, u, None if state is None else state[0])
     B, S = x.shape[:2]
-    y = y.reshape(B, S, -1).astype(x.dtype)
-    y = rmsnorm(params["ln_x"], y, cfg.norm_eps)
+    H, D = u.shape
+    # per-head group norm (RWKV6 uses GroupNorm with n_heads groups):
+    # normalizing each head's D-slice separately bounds the WKV output per
+    # head — a full-width rmsnorm lets one hot head rescale every other
+    # head's contribution, which destabilizes early training.
+    y = rmsnorm({"scale": params["ln_x"]["scale"].reshape(H, D)},
+                y.reshape(B, S, H, D).astype(x.dtype), cfg.norm_eps)
+    y = y.reshape(B, S, -1)
     y = y * jax.nn.silu(g.reshape(B, S, -1).astype(x.dtype))
     out = jnp.einsum("bsh,he->bse", y, weight_gather(params["wo"].astype(x.dtype), ("heads", "embed")))
     return constrain(out, ("batch", "seq", "embed_act")), s_end, x[:, -1:]

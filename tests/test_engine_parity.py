@@ -1,11 +1,13 @@
 """Parity suite for the unified allocator engine.
 
-Three layers must agree on allocations:
+Four layers must agree on allocations:
 
   1. the exact numpy reference filler (`repro.core.filling`),
   2. the online allocator's batched epoch (`repro.core.engine.BatchedEpoch`
-     via `OnlineAllocator.allocate_batched`), and
-  3. the jitted JAX engine (`repro.core.filling_jax`),
+     via `OnlineAllocator.allocate_batched`),
+  3. the jitted JAX engine (`repro.core.filling_jax`), and
+  4. the device-resident fused epoch (`repro.core.engine_jax`, one
+     lax.while_loop dispatch per epoch via `allocate_batched(use_kernel=True)`),
 
 all dispatching into the single criterion module `repro.core.criteria`.
 Layers 1 and 2 share the numpy RNG stream through the same
@@ -136,13 +138,177 @@ def test_jax_engine_matches_reference_weighted_constrained():
 
 
 def test_kernel_backend_matches_numpy_batched():
-    """Opt-in Pallas psdsf_score backend (characterized rPS-DSF pooled)."""
+    """Per-grant Pallas psdsf_score backend (characterized rPS-DSF pooled):
+    the legacy boundary-crossing path, kept for benchmarking."""
     pytest.importorskip("jax")
     inst = spark_cluster_heterogeneous()
     X_np, order_np = _batched_fill(inst, "rpsdsf", "pooled", 0)
-    X_k, order_k = _batched_fill(inst, "rpsdsf", "pooled", 0, use_kernel=True)
+    X_k, order_k = _batched_fill(inst, "rpsdsf", "pooled", 0,
+                                 use_kernel="pergrant")
     np.testing.assert_array_equal(X_np, X_k)
     assert order_np == order_k
+
+
+# ---------------------------------------------------------------------------
+# device-resident fused epochs (repro.core.engine_jax)
+# ---------------------------------------------------------------------------
+
+DEVICE_POLICIES = ("pooled", "rrr")
+
+
+@pytest.mark.parametrize("crit", CRITERIA)
+@pytest.mark.parametrize("pol", DEVICE_POLICIES)
+def test_device_epoch_matches_numpy_batched(crit, pol):
+    """use_kernel=True routes to the fused lax.while_loop epoch; its grant
+    sequence must equal the numpy BatchedEpoch's bit-for-bit on the
+    binary-exact instances (incl. phi != 1 and placement constraints).
+    RRR parity holds because the fused path pre-draws its permutations from
+    the same allocator rng stream the numpy RRRPolicy would consume."""
+    pytest.importorskip("jax")
+    for name, inst in _instances().items():
+        for seed in (0, 1, 2):
+            X_np, order_np = _batched_fill(inst, crit, pol, seed)
+            X_d, order_d = _batched_fill(inst, crit, pol, seed,
+                                         use_kernel=True)
+            np.testing.assert_array_equal(X_np, X_d, err_msg=f"{name}/{seed}")
+            assert order_np == order_d, f"{name}/{seed}"
+
+
+def _device_alloc(crit, pol, *, wanted, limit=None, use_kernel):
+    al = OnlineAllocator(2, criterion=crit, server_policy=pol,
+                         mode="characterized", seed=3)
+    for j in range(4):
+        al.add_agent(f"a{j}", (8.0, 10.0))
+    al.register("f0", demand=(2.0, 2.0), wanted_tasks=wanted, phi=2.0)
+    al.register("f1", demand=(1.0, 3.5), wanted_tasks=wanted)
+    al.register("f2", demand=(1.0, 1.0), wanted_tasks=3)  # exhausts mid-epoch
+    grants = al.allocate_batched(per_agent_limit=limit, use_kernel=use_kernel)
+    return [(g.fid, g.agent) for g in grants], al
+
+
+@pytest.mark.parametrize("crit", CRITERIA)
+@pytest.mark.parametrize("pol", DEVICE_POLICIES)
+def test_device_epoch_limit_and_exhaustion(crit, pol):
+    """per_agent_limit + a framework exhausting `wanted` mid-epoch follow
+    the numpy engine exactly, and the allocator state stays consistent."""
+    pytest.importorskip("jax")
+    for limit in (None, 1, 2):
+        seq_np, _ = _device_alloc(crit, pol, wanted=6, limit=limit,
+                                  use_kernel=False)
+        seq_d, al = _device_alloc(crit, pol, wanted=6, limit=limit,
+                                  use_kernel=True)
+        assert seq_np == seq_d, f"limit={limit}"
+        assert al.frameworks["f2"].n_tasks <= 3
+        for free in al.free.values():
+            assert (free >= -1e-9).all()
+        if limit is not None:
+            per_agent = {}
+            for _f, a in seq_d:
+                per_agent[a] = per_agent.get(a, 0) + 1
+            assert all(v <= limit for v in per_agent.values())
+
+
+def test_device_epoch_one_dispatch_no_recompile():
+    """The fused path runs ONE device dispatch per allocation epoch, and
+    growing the cluster within the padded shape bucket (powers of two)
+    reuses the cached jit executable — no retrace."""
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.core import engine_jax
+
+    def run(n_fw, n_ag):
+        al = OnlineAllocator(2, criterion="rpsdsf", server_policy="pooled",
+                             mode="characterized", seed=0)
+        for j in range(n_ag):
+            al.add_agent(f"a{j:03d}", (8.0, 8.0))
+        for n in range(n_fw):
+            al.register(f"f{n:03d}", demand=(1.0 + (n % 3), 2.0),
+                        wanted_tasks=4)
+        return al.allocate_batched(use_kernel=True)
+
+    run(5, 5)  # warm the jit cache for the (8, 8) bucket
+    t0, d0 = engine_jax.TRACE_COUNT, engine_jax.DISPATCH_COUNT
+    g1 = run(6, 6)   # same pow2 bucket (8, 8)
+    g2 = run(7, 8)   # still within the bucket
+    assert g1 and g2
+    assert engine_jax.DISPATCH_COUNT == d0 + 2, "one dispatch per epoch"
+    assert engine_jax.TRACE_COUNT == t0, \
+        "same padded bucket must not retrace"
+
+
+def test_grant_bound_degenerate_zero_demand_stays_finite():
+    """A zero-demand framework that still wants tasks must not void the
+    wanted/limit caps (the permutation stack is sized from this bound)."""
+    pytest.importorskip("jax")
+    from repro.core import engine_jax
+
+    TD = np.zeros((1, 2))
+    FREE = np.ones((3, 2)) * 8.0
+    assert engine_jax.grant_bound(TD, FREE, np.zeros(1), np.array([5.0])) == 5
+    assert engine_jax.grant_bound(TD, FREE, np.zeros(1), np.array([10.0**6]),
+                                  per_agent_limit=2) == 6
+
+
+def test_device_epoch_nondyadic_demands_keep_free_nonnegative():
+    """Non-dyadic demands make f32 FREE arithmetic inexact on device; the
+    online allocator re-validates each fused grant in f64 before applying,
+    so host free capacity can never go negative."""
+    pytest.importorskip("jax")
+    al = OnlineAllocator(2, criterion="rpsdsf", server_policy="pooled",
+                         mode="characterized", seed=0)
+    for j in range(3):
+        al.add_agent(f"a{j}", (30.0, 30.0))
+    al.register("f0", demand=(0.3, 0.1), wanted_tasks=10**6)
+    al.register("f1", demand=(0.1, 0.3), wanted_tasks=10**6)
+    grants = al.allocate_batched(use_kernel=True)
+    assert len(grants) > 100
+    for free in al.free.values():
+        assert (free >= -1e-9).all()
+
+
+def test_device_epoch_chaining_and_perm_growth_keep_parity():
+    """An epoch that overflows max_steps_cap chains dispatches (RRR cursor
+    carried across), and an undersized permutation stack grows by
+    stream-append and replays — both must leave the grant sequence
+    identical to one uncapped dispatch AND to the numpy engine."""
+    pytest.importorskip("jax")
+    from repro.core import engine_jax
+
+    inst = spark_cluster_heterogeneous()
+    _X_np, order_np = _batched_fill(inst, "rpsdsf", "rrr", 1)
+
+    def fused(**kw):
+        return engine_jax.run_epoch(
+            "rpsdsf", "rrr", X=np.zeros((2, 6)), D=inst.demands,
+            C=inst.capacities, FREE=inst.capacities.copy(), phi=inst.weights,
+            allowed=inst.allowed, wanted=np.full(2, 10.0**6),
+            true_demands=inst.demands, rng=np.random.default_rng(1), **kw)
+
+    assert fused() == order_np
+    assert fused(max_steps_cap=16) == order_np       # chained dispatches
+    assert fused(_perm_rows=2) == order_np           # grow-and-replay
+    assert fused(max_steps_cap=16, _perm_rows=2) == order_np
+
+
+def test_device_epoch_pallas_reductions_match():
+    """use_pallas=True routes the in-loop selects through the Pallas masked
+    argmin kernels (interpret mode on CPU); grant sequences are unchanged
+    at sub-tile sizes."""
+    pytest.importorskip("jax")
+    from repro.core import engine_jax
+
+    inst = spark_cluster_heterogeneous()
+    rng_a = np.random.default_rng(0)
+    rng_b = np.random.default_rng(0)
+    kw = dict(
+        X=np.zeros((2, 6)), D=inst.demands, C=inst.capacities,
+        FREE=inst.capacities.copy(), phi=inst.weights, allowed=inst.allowed,
+        wanted=np.full(2, 10.0**6), true_demands=inst.demands,
+    )
+    for crit, pol in [("rpsdsf", "pooled"), ("drf", "rrr"), ("tsf", "pooled"),
+                      ("psdsf", "rrr")]:
+        a = engine_jax.run_epoch(crit, pol, rng=rng_a, use_pallas=False, **kw)
+        b = engine_jax.run_epoch(crit, pol, rng=rng_b, use_pallas=True, **kw)
+        assert a == b, f"{crit}/{pol}"
 
 
 def test_batched_epoch_respects_per_agent_limit():

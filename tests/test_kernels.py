@@ -8,8 +8,16 @@ from _hypo import given, settings, st  # hypothesis, or a skip-shim when absent
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.psdsf_score.ops import psdsf_argmin
-from repro.kernels.psdsf_score.ref import psdsf_argmin_ref
+from repro.kernels.psdsf_score.ops import (
+    masked_argmin1d,
+    masked_argmin2d,
+    psdsf_argmin,
+)
+from repro.kernels.psdsf_score.ref import (
+    masked_argmin1d_ref,
+    masked_argmin2d_ref,
+    psdsf_argmin_ref,
+)
 from repro.kernels.rwkv6.ops import wkv6
 from repro.kernels.rwkv6.ref import wkv6_ref
 
@@ -187,6 +195,48 @@ def test_psdsf_argmin_agrees_with_engine_scores():
     feas = inst.feasible(X)
     K = onp.where(feas, K, onp.inf)
     assert float(v) == pytest.approx(K.min(), rel=1e-6)
+
+
+@pytest.mark.parametrize("N", [1, 7, 128, 300, 1000])
+def test_masked_argmin1d_matches_ref(N):
+    """The widened-coverage 1-D reduction (RRR server visits, DRF/TSF global
+    selection) against its jnp oracle, incl. padding tails."""
+    k1, k2 = jax.random.split(jax.random.key(N), 2)
+    s = jax.random.normal(k1, (N,))
+    ok = jax.random.uniform(k2, (N,)) < 0.6
+    v1, i1 = masked_argmin1d(s, ok, interpret=True)
+    v2, i2 = masked_argmin1d_ref(s, ok)
+    assert int(i1) == int(i2)
+    if int(i2) >= 0:
+        assert float(v1) == float(v2)
+
+
+def test_masked_argmin1d_all_masked():
+    _v, i = masked_argmin1d(jnp.ones(9), jnp.zeros(9, bool), interpret=True)
+    assert int(i) == -1
+
+
+@pytest.mark.parametrize("N,J", [(3, 2), (64, 64), (130, 129), (256, 128)])
+def test_masked_argmin2d_matches_ref(N, J):
+    """The pooled-selection 2-D reduction over a maintained score matrix:
+    min value always agrees; the winning pair agrees up to exact ties
+    (cross-tile tie order is tile-major, see the kernel docstring)."""
+    k1, k2 = jax.random.split(jax.random.key(N * J), 2)
+    s = jax.random.normal(k1, (N, J))
+    feas = jax.random.uniform(k2, (N, J)) < 0.5
+    v1, n1, j1 = masked_argmin2d(s, feas, interpret=True)
+    v2, n2, j2 = masked_argmin2d_ref(s, feas)
+    if int(n2) == -1:
+        assert int(n1) == -1 and int(j1) == -1
+    else:
+        assert float(v1) == float(v2)
+        assert bool(feas[n1, j1])
+
+
+def test_masked_argmin2d_all_masked():
+    _v, n, j = masked_argmin2d(jnp.ones((4, 5)), jnp.zeros((4, 5), bool),
+                               interpret=True)
+    assert int(n) == -1 and int(j) == -1
 
 
 @settings(max_examples=12, deadline=None)
