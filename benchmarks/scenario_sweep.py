@@ -14,7 +14,11 @@ per-grant legacy path is available via ``--pergrant`` for comparison) —
 
 Grid cells are independent (per-cell seeds, fresh workload instances), so
 ``--jobs N`` fans them out over a process pool; every result row carries its
-own ``wall_s`` so the trajectory records per-cell cost either way.
+own ``wall_s`` so the trajectory records per-cell cost either way.  Workers
+(and the in-process path) warm the engine ONCE before any cell is timed —
+the one-time ``assert_batched_parity`` run and first-dispatch compile work
+are paid in the pool initializer, so per-cell ``wall_s`` measures steady-
+state scheduling cost, not warmup.
 
     PYTHONPATH=src python -m benchmarks.scenario_sweep            # full grid
     PYTHONPATH=src python -m benchmarks.scenario_sweep --jobs 8   # parallel
@@ -107,6 +111,15 @@ def _cell_star(args):
     return _cell(*args)
 
 
+def _warm_worker():
+    """Process-pool initializer: pay the engine warmup once per worker so
+    no grid cell's ``wall_s`` includes it (the first run_paper_experiment
+    call in a process runs the batched-vs-pergrant parity sims)."""
+    from repro.core.simulator import assert_batched_parity
+
+    assert_batched_parity()
+
+
 def run(criteria=None, policies=None, seeds=None, quick: bool = False,
         batched: bool = True, jobs: int = 1, out: str | None = None,
         print_csv: bool = True) -> dict:
@@ -127,9 +140,12 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
              for crit in criteria
              for pol in policies
              for seed in seeds]
+    if jobs == 1:
+        _warm_worker()          # outside the timer, like the pool workers
     t0 = time.perf_counter()
     if jobs > 1:
-        with concurrent.futures.ProcessPoolExecutor(max_workers=jobs) as ex:
+        with concurrent.futures.ProcessPoolExecutor(
+                max_workers=jobs, initializer=_warm_worker) as ex:
             results = list(ex.map(_cell_star, cells))
     else:
         results = [_cell(*c) for c in cells]
@@ -138,6 +154,7 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
         "bench": "scenario_sweep",
         "engine": "batched" if batched else "pergrant",
         "jobs": jobs,
+        "warm_workers": True,
         "sweep_wall_s": sweep_wall,
         "grid": {"workloads": list(builders), "criteria": list(criteria),
                  "policies": list(policies), "seeds": list(seeds)},
@@ -155,6 +172,7 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
         print(f"# {len(results)} cells in {sweep_wall:.1f}s "
               f"(jobs={jobs})")
     if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
             json.dump(doc, f, indent=1)
         if print_csv:

@@ -19,6 +19,13 @@ slots are recycled on removal, so live rows/columns never move.  Engines
 that want name-sorted matrices (the allocator's historical tie-break order)
 use :meth:`sorted_view`; the gather order is cached and only recomputed on
 membership changes.
+
+Double-buffered epochs: :meth:`epoch_view` returns a *frozen* (read-only)
+name-sorted snapshot — the upload view an asynchronous allocation epoch
+works from while the live arrays keep serving the DES.  ``mutation_count``
+ticks on EVERY state change (membership and O(R) updates alike), so
+``OnlineAllocator.commit_epoch`` can prove the snapshot is still current
+before applying an in-flight grant sequence.
 """
 from __future__ import annotations
 
@@ -67,6 +74,9 @@ class ClusterState:
         self._fw_allowed_names: dict[int, Optional[frozenset]] = {}
         self._version = 0          # bumped on membership change
         self._view_cache = None    # (version, f_slots, a_slots, fids, agents)
+        #: ticks on every mutation (membership AND grant/release/set_*) —
+        #: the in-flight-epoch staleness guard (see module docstring).
+        self.mutation_count = 0
 
     # -- capacity growth -----------------------------------------------------
 
@@ -120,6 +130,7 @@ class ClusterState:
         for slot, names in self._fw_allowed_names.items():
             self.allowed[slot, j] = names is None or name in names
         self._version += 1
+        self.mutation_count += 1
         return j
 
     def remove_agent(self, name: str) -> int:
@@ -131,6 +142,7 @@ class ClusterState:
         self.allowed[:, j] = True
         self._free_agent_slots.append(j)
         self._version += 1
+        self.mutation_count += 1
         return j
 
     def add_framework(self, fid: str, demand=None, phi: float = 1.0,
@@ -160,6 +172,7 @@ class ClusterState:
             for a, j in self.agent2slot.items():
                 self.allowed[n, j] = a in names
         self._version += 1
+        self.mutation_count += 1
         return n
 
     def remove_framework(self, fid: str) -> int:
@@ -173,6 +186,7 @@ class ClusterState:
         self._fw_allowed_names.pop(n, None)
         self._free_fw_slots.append(n)
         self._version += 1
+        self.mutation_count += 1
         return n
 
     # -- incremental updates (O(R) each) --------------------------------------
@@ -181,20 +195,25 @@ class ClusterState:
         n, j = self.fid2slot[fid], self.agent2slot[agent]
         self.X[n, j] += n_units
         self.FREE[j] -= bundle
+        self.mutation_count += 1
 
     def release(self, fid: str, agent: str, bundle, n_units: int = 1) -> None:
         n, j = self.fid2slot[fid], self.agent2slot[agent]
         self.X[n, j] -= n_units
         self.FREE[j] += bundle
+        self.mutation_count += 1
 
     def set_demand(self, fid: str, demand) -> None:
         self.D[self.fid2slot[fid]] = 0.0 if demand is None else demand
+        self.mutation_count += 1
 
     def set_weight(self, fid: str, phi: float) -> None:
         self.phi[self.fid2slot[fid]] = float(phi)
+        self.mutation_count += 1
 
     def set_wanted(self, fid: str, wanted: float) -> None:
         self.wanted[self.fid2slot[fid]] = float(wanted)
+        self.mutation_count += 1
 
     # -- views ----------------------------------------------------------------
 
@@ -228,3 +247,15 @@ class ClusterState:
             allowed=self.allowed[np.ix_(f_slots, a_slots)],
             wanted=self.wanted[f_slots],
         )
+
+    def epoch_view(self) -> StateView:
+        """Frozen :meth:`sorted_view` — the double-buffer an in-flight
+        allocation epoch reads from.  The arrays are the same gathered
+        copies sorted_view hands out, additionally marked read-only so a
+        concurrent writer trips immediately instead of corrupting an epoch
+        that already uploaded them."""
+        view = self.sorted_view()
+        for arr in (view.X, view.D, view.C, view.FREE, view.phi,
+                    view.allowed, view.wanted):
+            arr.setflags(write=False)
+        return view

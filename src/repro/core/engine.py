@@ -33,6 +33,24 @@ from repro.core.policies import make_policy
 _KBIG = 3.0e38  # unsatisfiable-demand sentinel for the kernel backend
                 # (matches repro.kernels.psdsf_score BIG up to headroom)
 
+#: Measured crossover for ``use_kernel="auto"`` path selection, in epoch
+#: cells (N frameworks x J agents).  The candidates are the legacy per-grant
+#: recompute, this numpy incremental epoch, and the fused device epoch
+#: (:mod:`repro.core.engine_jax`); per BENCH_allocator.json the per-grant
+#: path never wins (batched is 18-52x faster at every benched size), so the
+#: auto rule reduces to batched-vs-device.  Below ``AUTO_KERNEL_FLOOR_CELLS``
+#: the resolver returns the numpy epoch without even importing jax.  On the
+#: CPU backend the numpy epoch beats the device epoch at BOTH benched sizes
+#: (50x25: ~21.6k vs ~10.2k grants/s; 200x100: ~18.5k vs ~11.9k for
+#: drf/rrr), so its crossover sits past the 1000x400 ``--big`` point, at
+#: fleet scale where the O(N*J) argmin-per-grant select dominates the numpy
+#: epoch; accelerator backends flip far earlier (dispatch overhead is fixed
+#: while the numpy host loop is not).
+AUTO_KERNEL_MIN_CELLS = {"cpu": 1 << 19, "default": 1 << 13}
+#: below the smallest per-backend threshold the resolver's answer is
+#: "numpy" on every backend, so it never needs to import jax to know it
+AUTO_KERNEL_FLOOR_CELLS = min(AUTO_KERNEL_MIN_CELLS.values())
+
 # lazily-bound kernel backend modules: importing them pulls in jax, which the
 # numpy path must never pay for (and the per-grant hot loop must not re-pay
 # the import machinery on every pick).

@@ -58,7 +58,46 @@ Shape bucketing: the host wrapper pads N and J up to powers of two (>= 8)
 and ``max_steps`` to a power-of-two bucket, so growing a fleet within its
 padded tile reuses the cached jit executable — a trace-count regression
 test pins this.  On non-CPU backends the mutated buffers are donated
-(``donate_argnums``) so XLA reuses the allocation across epochs.
+(``donate_argnums``) so XLA reuses the allocation across epochs; the RRR
+grow-and-replay path re-uploads the segment-start state from a host-side
+snapshot, so donation is safe under RRR too (the pre-drawn permutation
+stack is never in the donated set).
+
+Asynchronous epochs and commit-point semantics
+----------------------------------------------
+:func:`run_epoch_async` issues the SAME host prep + device dispatch as
+:func:`run_epoch` but returns an :class:`EpochHandle` instead of blocking on
+the grant-sequence readback — JAX's async dispatch returns as soon as the
+while-loop is enqueued, so the host can stage the NEXT epoch's inputs (see
+``OnlineAllocator.begin_epoch``'s double-buffered views) or pipeline epochs
+of independent allocators while the device runs.  ``EpochHandle.result()``
+is the COMMIT POINT: it blocks, drives any chained dispatches (overlong
+epochs) and RRR grow-and-replay rounds, and returns the flat grant
+sequence.  ``run_epoch`` is literally ``run_epoch_async(...).result()``, so
+async-vs-sync grant sequences are bit-for-bit identical by construction.
+The RRR permutation pre-draw consumes the allocator rng INSIDE
+``run_epoch_async`` — at dispatch, not at commit — so interleaving
+begin/commit pairs of DIFFERENT allocators cannot reorder rng streams.
+The one exception is the rare grow-and-replay top-up, which draws at
+``result()`` when the pre-drawn budget proves too small; it stays
+correctly sequenced because a single allocator permits only one in-flight
+epoch at a time (``OnlineAllocator.begin_epoch`` refuses overlap).  The
+cross-epoch caveat above (the fused path drawing a fixed permutation
+budget up front) applies to async epochs unchanged.
+
+Sharded select
+--------------
+With ``shards=K > 1`` the in-loop selects partition the padded agent axis
+(and, for the 1-D criterion selects, the framework axis) into K equal
+shards: each iteration runs a per-shard masked min (a ``vmap`` over the
+leading shard axis — the single-device stand-in for a ``shard_map``
+placement), cross-shard-reduces the partial minima into the global
+tie-tolerance threshold, and then reduces the per-shard first-qualifying
+indices to the global lexicographic winner.  The two-pass reduction applies
+exactly the same f32 comparisons as the unsharded ``_argmin_tie_low``, so
+grant sequences are unchanged (parity-gated).  ``shards`` is part of the
+jit key: the first epoch at a new shard count traces once per shape bucket,
+after which the executable is reused.
 """
 from __future__ import annotations
 
@@ -113,6 +152,49 @@ def _argmin_tie_low(s, mask, rtol=1e-6, atol=1e-9):
     return jnp.min(jnp.where(masked <= m + tol, idx, _IBIG))
 
 
+def _argmin_tie_low_sharded(s, mask, shards, rtol=1e-6, atol=1e-9):
+    """Sharded :func:`_argmin_tie_low`: per-shard masked min (vmap over a
+    leading shard axis), cross-shard reduce of the partial minima into the
+    global threshold, then reduce the per-shard first-qualifying indices.
+    f32 min is exactly associative/commutative, so the winner is identical
+    to the unsharded reduction."""
+    L = s.shape[0]
+    Ls = L // shards
+    masked = jnp.where(mask, s.astype(jnp.float32), _BIG).reshape(shards, Ls)
+    m = jnp.min(jax.vmap(jnp.min)(masked))         # cross-shard reduce #1
+    tol = atol + rtol * jnp.abs(m)
+    idx = jnp.arange(Ls, dtype=jnp.int32)
+    local = jax.vmap(
+        lambda row: jnp.min(jnp.where(row <= m + tol, idx, _IBIG)))(masked)
+    valid = local < _IBIG
+    offs = jnp.arange(shards, dtype=jnp.int32) * Ls
+    # clamp invalid shards BEFORE adding the offset (offs + _IBIG overflows)
+    return jnp.min(jnp.where(valid, offs + jnp.where(valid, local, 0), _IBIG))
+
+
+def _argmin2d_tie_low_sharded(mat, mask, shards, rtol=1e-6, atol=1e-9):
+    """Sharded (N, J) masked argmin, agents partitioned into ``shards``
+    column blocks.  Within a shard the first-qualifying LOCAL flat index
+    (row-major over (N, J/K)) picks the same (n, j) pair as lexicographic
+    (n, j) order, so reducing the per-shard winners by the GLOBAL flat key
+    ``n * J + j`` reproduces the unsharded flattened tie-break exactly."""
+    N, J = mat.shape
+    Js = J // shards
+    m3 = (jnp.where(mask, mat.astype(jnp.float32), _BIG)
+          .reshape(N, shards, Js).transpose(1, 0, 2).reshape(shards, N * Js))
+    m = jnp.min(jax.vmap(jnp.min)(m3))
+    tol = atol + rtol * jnp.abs(m)
+    idx = jnp.arange(N * Js, dtype=jnp.int32)
+    local = jax.vmap(
+        lambda row: jnp.min(jnp.where(row <= m + tol, idx, _IBIG)))(m3)
+    valid = local < _IBIG
+    lf = jnp.where(valid, local, 0)
+    n, jl = lf // Js, lf % Js
+    offs = jnp.arange(shards, dtype=jnp.int32) * Js
+    key = jnp.min(jnp.where(valid, n * J + offs + jl, _IBIG))
+    return key // J, key % J
+
+
 class _EpochState(NamedTuple):
     X: jax.Array        # (N, J) f32 allocation counts
     tot: jax.Array      # (N,) f32
@@ -132,7 +214,7 @@ class _EpochState(NamedTuple):
 def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
                pidx0, pos0, j_real, limit, eps, *, kind: str, policy: str,
                lookahead: bool, use_limit: bool, use_pallas: bool,
-               interpret: bool, max_steps: int):
+               interpret: bool, max_steps: int, shards: int = 1):
     """Traceable core: run one allocation epoch entirely under lax control
     flow.  Returns ``(ns, js, count, X, tot, FREE, used, pidx, pos)``.
 
@@ -147,6 +229,8 @@ def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
     """
     global TRACE_COUNT
     TRACE_COUNT += 1
+    if shards > 1 and (X.shape[0] % shards or X.shape[1] % shards):
+        shards = 1      # static shapes: resolved at trace time, no retrace
     f32 = jnp.float32
     X = X.astype(f32)
     D = D.astype(f32)
@@ -198,6 +282,8 @@ def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
 
     def _argmin1d(vec, ok):
         """Masked argmin over a vector (RRR visit / global criterion)."""
+        if shards > 1:
+            return _argmin_tie_low_sharded(vec, ok, shards)
         if use_pallas and N % bn == 0:
             mins, args = masked_argmin1d_tiles(
                 vec.astype(f32), ok.astype(jnp.int32), bn=bn,
@@ -208,6 +294,8 @@ def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
 
     def _argmin2d(mat, ok):
         """Masked argmin over the (N, J) score matrix (pooled)."""
+        if shards > 1:
+            return _argmin2d_tie_low_sharded(mat, ok, shards)
         if use_pallas and N % bn == 0 and J % bj == 0:
             mins, args = masked_argmin2d_tiles(
                 mat.astype(f32), ok.astype(jnp.int32), bn=bn, bj=bj,
@@ -314,7 +402,7 @@ def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
 
 
 _STATIC = ("kind", "policy", "lookahead", "use_limit", "use_pallas",
-           "interpret", "max_steps")
+           "interpret", "max_steps", "shards")
 
 
 @functools.lru_cache(maxsize=None)
@@ -367,38 +455,145 @@ def grant_bound(TD, FREE, tot, wanted, per_agent_limit=None) -> int:
     return max(bound, 1)
 
 
-def run_epoch(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
-              wanted, true_demands, per_agent_limit: Optional[int] = None,
-              lookahead: bool = False, rng: Optional[np.random.Generator] = None,
-              eps: float = 1e-9, use_pallas: bool = False,
-              max_steps_cap: int = 16384,
-              _perm_rows: Optional[int] = None) -> list[tuple[int, int]]:
-    """Run one allocation epoch on device; returns the grant sequence.
+class _EpochRun:
+    """Continuation state of an in-flight fused epoch (one dispatch issued,
+    readback deferred).  ``_finish`` drives RRR grow-and-replay rounds and
+    chained overflow segments exactly like the old synchronous loop did."""
 
-    Host-side wrapper around :func:`epoch_loop`: pads to power-of-two shape
-    buckets (cached jit executables), pre-draws RRR permutations from the
-    shared numpy rng, dispatches ONCE, and transfers the grant sequence
-    back in one readback.  If the conservative :func:`grant_bound` exceeds
-    ``max_steps_cap`` the epoch is chained over several dispatches (the
-    returned sequence is still a single flat list; the RRR round cursor and
-    permutation stack carry across the chain, so the sequence is identical
-    to a single uncapped dispatch).
+    def __init__(self, *, fn, kind, policy, lookahead, use_limit, use_pallas,
+                 interpret, shards, J, limit, eps, draw, consts,
+                 perms, bound, max_steps_cap, snap):
+        self.fn = fn                # _jitted(donate) — donation baked in
+        self.kind, self.policy = kind, policy
+        self.lookahead, self.use_limit = lookahead, use_limit
+        self.use_pallas, self.interpret = use_pallas, interpret
+        self.shards = shards
+        self.J, self.limit, self.eps = J, limit, eps
+        self.draw = draw            # rng-stream permutation drawer (RRR)
+        self.consts = consts        # (dD, dTD, dC, dphi, dwanted, dallowed)
+        self.perms = perms
+        self.pidx = self.pos = 0
+        self.remaining = bound
+        self.max_steps_cap = max_steps_cap
+        # host-side snapshot of the segment-start state: with donation the
+        # dispatch invalidates its input buffers, so a grow-and-replay round
+        # re-uploads from here (RRR only; pooled never replays).
+        self.snap = snap
+        self.pending = None
 
-    ``use_pallas`` is strictly opt-in: the Pallas masked-argmin reductions
-    resolve EXACT-tie winners without the f32 tie tolerance the jnp path
-    applies (see the module docstring), so keep it off when bit-parity with
-    the numpy engine matters.
+    def dispatch(self, X_cur, FREE_cur, used_cur):
+        global DISPATCH_COUNT
+        DISPATCH_COUNT += 1
+        self.max_steps = _bucket(min(self.remaining, self.max_steps_cap),
+                                 lo=16)
+        dD, dTD, dC, dphi, dwanted, dallowed = self.consts
+        self.pending = self.fn(
+            X_cur, dD, dTD, dC, FREE_cur, dphi, dwanted, dallowed,
+            jnp.asarray(self.perms), used_cur,
+            np.int32(self.pidx), np.int32(self.pos),
+            jnp.int32(self.J), self.limit, jnp.float32(self.eps),
+            kind=self.kind, policy=self.policy, lookahead=self.lookahead,
+            use_limit=self.use_limit, use_pallas=self.use_pallas,
+            interpret=self.interpret, max_steps=self.max_steps,
+            shards=self.shards,
+        )
+
+    def _finish(self) -> list[tuple[int, int]]:
+        out: list[tuple[int, int]] = []
+        while True:
+            ns, js, count, Xd, _totd, FREEd, usedd, pidx_d, pos_d = \
+                self.pending
+            if self.policy == "rrr":
+                # a clamped permutation read implies the final cursor ran
+                # past the stack (every used row index is <= the final
+                # pidx), so ending ON the last row is still exact — only
+                # pidx >= K is tainted: grow the stack (stream-append) and
+                # replay from the host snapshot (the donated inputs of the
+                # failed dispatch may already be invalidated).
+                while int(pidx_d) >= self.perms.shape[0]:
+                    self.perms = np.concatenate(
+                        [self.perms, self.draw(self.perms.shape[0])])
+                    Xs, FREEs, useds = self.snap
+                    self.dispatch(jnp.asarray(Xs, jnp.float32),
+                                  jnp.asarray(FREEs, jnp.float32),
+                                  jnp.asarray(useds, jnp.int32))
+                    ns, js, count, Xd, _totd, FREEd, usedd, pidx_d, pos_d = \
+                        self.pending
+            k = int(count)
+            out.extend(zip(np.asarray(ns[:k]).tolist(),
+                           np.asarray(js[:k]).tolist()))
+            if k < self.max_steps or self.remaining - k <= 0:
+                return out
+            # overflow: chain another dispatch from the final DEVICE state
+            # (incl. the RRR cursor, so the chain equals one long epoch)
+            self.remaining -= k
+            self.pidx, self.pos = int(pidx_d), int(pos_d)
+            if self.policy == "rrr":
+                # snapshot BEFORE the arrays are donated into the next call
+                self.snap = (np.asarray(Xd), np.asarray(FREEd),
+                             np.asarray(usedd))
+            self.dispatch(Xd, FREEd, usedd)
+
+
+class EpochHandle:
+    """Handle to an in-flight fused epoch (see :func:`run_epoch_async`).
+
+    ``result()`` is the commit point: it blocks until the device loop(s)
+    finish, drives any chained/replayed dispatches, and returns the flat
+    grant sequence.  Idempotent — repeated calls return the same list."""
+
+    __slots__ = ("_seq", "_run")
+
+    def __init__(self, seq=None, run=None):
+        self._seq = seq
+        self._run = run
+
+    @property
+    def in_flight(self) -> bool:
+        """True until ``result()`` has been driven to completion."""
+        return self._seq is None
+
+    def result(self) -> list[tuple[int, int]]:
+        if self._seq is None:
+            self._seq = self._run._finish()
+            self._run = None
+        return self._seq
+
+
+def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
+                    wanted, true_demands,
+                    per_agent_limit: Optional[int] = None,
+                    lookahead: bool = False,
+                    rng: Optional[np.random.Generator] = None,
+                    eps: float = 1e-9, use_pallas: bool = False,
+                    shards: int = 1, max_steps_cap: int = 16384,
+                    _perm_rows: Optional[int] = None,
+                    _donate: Optional[bool] = None) -> EpochHandle:
+    """Dispatch one allocation epoch on device WITHOUT blocking on readback.
+
+    Performs the same host prep as the synchronous path — pads to
+    power-of-two shape buckets (cached jit executables), pre-draws RRR
+    permutations from the shared numpy rng (all rng consumption happens
+    here, at dispatch) — issues the first jitted while-loop dispatch, and
+    returns an :class:`EpochHandle`.  ``handle.result()`` blocks, drives
+    chained dispatches (epochs whose :func:`grant_bound` exceeds
+    ``max_steps_cap``) and RRR grow-and-replay rounds, and returns the
+    grant sequence — bit-for-bit the sequence :func:`run_epoch` returns.
+
+    ``shards > 1`` partitions the in-loop selects (see the module
+    docstring); it is rounded down to a power of two dividing the padded
+    shapes.  ``use_pallas`` is strictly opt-in (exact-tie caveat in the
+    module docstring).  ``_donate`` forces buffer donation on/off (test
+    hook; default: donate on non-CPU backends — safe for RRR because
+    replay re-uploads from a host snapshot).
     """
-    global DISPATCH_COUNT
     crit = criteria.get_criterion(criterion)
     kind = crit.name
     if kind not in COVERED_CRITERIA or policy not in COVERED_POLICIES:
         raise ValueError(f"fused epoch does not cover {kind}/{policy}")
     interpret = jax.default_backend() == "cpu"
-    # donation invalidates the input buffers, but the RRR grow-and-replay
-    # path must be able to re-run a dispatch with the same state arrays —
-    # so only the replay-free pooled policy donates.
-    donate = jax.default_backend() != "cpu" and policy != "rrr"
+    donate = (jax.default_backend() != "cpu") if _donate is None \
+        else bool(_donate)
 
     X = np.asarray(X, np.float64)
     D = np.asarray(D, np.float64)
@@ -409,15 +604,17 @@ def run_epoch(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
     wanted = np.asarray(wanted, np.float64)
     allowed = np.asarray(allowed, bool)
     N, J = X.shape
-    R = D.shape[1]
     tot = X.sum(axis=1)
 
     bound = grant_bound(TD, FREE, tot, wanted, per_agent_limit)
     if bound == 0:
-        return []
+        return EpochHandle(seq=[])
     Np, Jp = _bucket(N), _bucket(J)
     limit = np.int32(per_agent_limit if per_agent_limit is not None else 0)
     use_limit = per_agent_limit is not None
+    shards = max(1, int(shards))
+    shards = 1 << (shards.bit_length() - 1)      # floor to a power of two
+    shards = min(shards, Np, Jp)                 # pow2s: divides both
 
     Xp = _pad(_pad(X, Np, 0, 0.0), Jp, 1, 0.0)
     Dp = _pad(D, Np, 0, 0.0)
@@ -460,45 +657,26 @@ def run_epoch(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
     f32 = jnp.float32
     # constant inputs upload once; the mutable state arrays stay on device
     # across chained segments (only the grant sequence is read back).
-    dD, dTD, dC = jnp.asarray(Dp, f32), jnp.asarray(TDp, f32), jnp.asarray(Cp, f32)
-    dphi, dwanted = jnp.asarray(phip, f32), jnp.asarray(wantedp, f32)
-    dallowed = jnp.asarray(allowedp)
-    X_cur = jnp.asarray(Xp, f32)
-    FREE_cur = jnp.asarray(FREEp, f32)
-    used_cur = jnp.asarray(usedp)
+    consts = (jnp.asarray(Dp, f32), jnp.asarray(TDp, f32),
+              jnp.asarray(Cp, f32), jnp.asarray(phip, f32),
+              jnp.asarray(wantedp, f32), jnp.asarray(allowedp))
+    run = _EpochRun(
+        fn=fn, kind=kind, policy=policy, lookahead=lookahead,
+        use_limit=use_limit, use_pallas=use_pallas, interpret=interpret,
+        shards=shards, J=J, limit=limit, eps=eps, draw=_draw_perms,
+        consts=consts, perms=perms, bound=bound,
+        max_steps_cap=max_steps_cap,
+        snap=(Xp, FREEp, usedp) if policy == "rrr" else None,
+    )
+    run.dispatch(jnp.asarray(Xp, f32), jnp.asarray(FREEp, f32),
+                 jnp.asarray(usedp))
+    return EpochHandle(run=run)
 
-    out: list[tuple[int, int]] = []
-    remaining = bound
-    pidx = pos = 0
-    while remaining > 0:
-        max_steps = _bucket(min(remaining, max_steps_cap), lo=16)
-        while True:
-            DISPATCH_COUNT += 1
-            ns, js, count, Xd, totd, FREEd, usedd, pidx_d, pos_d = fn(
-                X_cur, dD, dTD, dC, FREE_cur, dphi, dwanted, dallowed,
-                jnp.asarray(perms), used_cur,
-                np.int32(pidx), np.int32(pos),
-                jnp.int32(J), limit, jnp.float32(eps),
-                kind=kind, policy=policy, lookahead=lookahead,
-                use_limit=use_limit, use_pallas=use_pallas,
-                interpret=interpret, max_steps=max_steps,
-            )
-            # a clamped permutation read implies the final cursor ran past
-            # the stack (every used row index is <= the final pidx), so
-            # ending ON the last row is still exact — only pidx >= K is
-            # tainted: grow the stack (stream-append) and replay.
-            if policy != "rrr" or int(pidx_d) < perms.shape[0]:
-                break
-            perms = np.concatenate([perms, _draw_perms(perms.shape[0])])
-        k = int(count)
-        ns = np.asarray(ns[:k])
-        js = np.asarray(js[:k])
-        out.extend(zip(ns.tolist(), js.tolist()))
-        if k < max_steps:
-            break
-        # overflow: chain another dispatch from the final DEVICE state
-        # (incl. the RRR cursor, so the chain equals one long epoch)
-        X_cur, FREE_cur, used_cur = Xd, FREEd, usedd
-        pidx, pos = int(pidx_d), int(pos_d)
-        remaining -= k
-    return out
+
+def run_epoch(criterion, policy: str, **kw) -> list[tuple[int, int]]:
+    """Run one allocation epoch on device; returns the grant sequence.
+
+    Synchronous wrapper: ``run_epoch_async(...).result()`` — dispatch and
+    commit back to back, so async and sync sequences are identical by
+    construction (see :func:`run_epoch_async` for the knobs)."""
+    return run_epoch_async(criterion, policy, **kw).result()

@@ -71,7 +71,8 @@ def _masked_argmin(scores, mask, key, random_tie: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("criterion", "policy", "lookahead", "tie", "max_steps")
+    jax.jit, static_argnames=("criterion", "policy", "lookahead", "tie",
+                              "max_steps", "shards")
 )
 def progressive_fill_jax(
     D: jax.Array,            # (N, R) demands
@@ -84,10 +85,15 @@ def progressive_fill_jax(
     lookahead: bool = False,
     tie: str = "low",
     max_steps: int = 4096,
+    shards: int = 1,         # shard the delegated epoch-loop selects
     x0: jax.Array | None = None,
     allowed: jax.Array | None = None,   # (N, J) bool placement constraints
 ) -> jax.Array:
-    """Run progressive filling; returns the (N, J) int32 allocation."""
+    """Run progressive filling; returns the (N, J) int32 allocation.
+
+    ``shards > 1`` partitions the deterministic pooled path's in-loop
+    selects across agent shards (parity-gated — see the engine_jax module
+    docstring); the legacy RRR/bestfit/random-tie bodies ignore it."""
     crit = criteria.get_criterion(criterion)
     pol = _POL[policy]
     random_tie = tie == "random"
@@ -122,7 +128,7 @@ def progressive_fill_jax(
             jnp.int32(J), jnp.int32(0), jnp.float32(1e-6),
             kind=crit.name, policy=policy, lookahead=lookahead,
             use_limit=False, use_pallas=False, interpret=False,
-            max_steps=max_steps,
+            max_steps=max_steps, shards=shards,
         )
         return x_fin.astype(jnp.int32)
 

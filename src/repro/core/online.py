@@ -32,6 +32,25 @@ the allocator never rebuilds matrices from Python dicts.  Two epoch paths:
     per epoch and keeps them consistent with O((N+J)*R) incremental updates
     per grant, selecting through the same :mod:`repro.core.policies` strategy
     objects as the exact reference filler (parity-tested against it).
+
+Batched epochs default to ``use_kernel="auto"``: the backend (numpy
+incremental vs the fused device epoch of :mod:`repro.core.engine_jax`) is
+picked from (N, J, jax backend) against the crossover measured in
+``benchmarks/allocator_bench.py`` (``engine.AUTO_KERNEL_MIN_CELLS``), so
+small clusters never pay a device dispatch and fleet-scale epochs never run
+the host loop.
+
+Asynchronous epochs (the double-buffered pipeline): :meth:`begin_epoch`
+freezes the epoch inputs into an immutable upload view
+(``ClusterState.epoch_view``) and dispatches the fused device epoch WITHOUT
+blocking on the grant-sequence readback; :meth:`commit_epoch` blocks, runs
+the f64 re-validation and applies the grants incrementally — bit-for-bit
+the sequence the synchronous path produces, because the synchronous path
+*is* ``commit_epoch(begin_epoch(...))`` back to back.  Between begin and
+commit the live ClusterState may serve reads, but mutating it invalidates
+the in-flight (device) epoch and is refused at commit (a ``mutation_count``
+guard), and only one epoch may be in flight per allocator: the caller owns
+the commit point.
 """
 from __future__ import annotations
 
@@ -41,8 +60,12 @@ from typing import Callable, NamedTuple, Optional
 import numpy as np
 
 from repro.core import criteria
-from repro.core.cluster_state import ClusterState
-from repro.core.engine import BatchedEpoch
+from repro.core.cluster_state import ClusterState, StateView
+from repro.core.engine import (
+    AUTO_KERNEL_FLOOR_CELLS,
+    AUTO_KERNEL_MIN_CELLS,
+    BatchedEpoch,
+)
 
 
 class AllocSnapshot(NamedTuple):
@@ -90,6 +113,30 @@ class Grant:
     n_executors: int            # executors the framework carved out of it
 
 
+@dataclasses.dataclass
+class InFlightEpoch:
+    """A double-buffered allocation epoch (see :meth:`OnlineAllocator.begin_epoch`).
+
+    ``view``/``TD`` are the frozen upload snapshot the epoch scores from;
+    ``handle`` is the in-flight device work (``engine_jax.EpochHandle``).
+    When the configuration cannot run on the fused device path the epoch
+    falls back to the host engine at begin time and ``grants`` carries the
+    already-applied result — ``commit_epoch`` then just returns it, so
+    callers drive both paths identically."""
+
+    view: Optional[StateView]
+    TD: Optional[np.ndarray]
+    per_agent_limit: Optional[int]
+    handle: Optional[object] = None     # engine_jax.EpochHandle (fused path)
+    grants: Optional[list] = None       # host fallback: applied at begin
+    guard: int = 0                      # ClusterState.mutation_count at begin
+    consumed: bool = False
+
+    @property
+    def in_flight(self) -> bool:
+        return self.handle is not None and not self.consumed
+
+
 class OnlineAllocator:
     """Offer-based fair allocator over a dynamic pool of agents."""
 
@@ -115,6 +162,7 @@ class OnlineAllocator:
         self.rng = np.random.default_rng(seed)
         self.state = ClusterState(n_resources)
         self.frameworks: dict[str, FrameworkState] = {}
+        self._inflight_epoch: Optional[InFlightEpoch] = None
 
     # -- dict-style views (read-only; canonical data is in self.state) -------
 
@@ -240,7 +288,7 @@ class OnlineAllocator:
     # -- allocation epoch ----------------------------------------------------
 
     def allocate(self, per_agent_limit: Optional[int] = None,
-                 batched: bool = False, use_kernel=False) -> list[Grant]:
+                 batched: bool = False, use_kernel="auto") -> list[Grant]:
         """Run one allocation epoch; returns grants.
 
         per_agent_limit models Mesos's offer cycle: each agent's resources are
@@ -251,8 +299,9 @@ class OnlineAllocator:
         batched=True uses the incremental :class:`BatchedEpoch` engine with
         the shared server-policy objects (reference-filler semantics for RRR
         rounds); batched=False keeps the legacy per-grant offer semantics.
-        use_kernel=True additionally opts the batched path into the
-        device-resident JAX epoch (see :meth:`allocate_batched`).
+        use_kernel picks the batched backend (default ``"auto"``: numpy below
+        the measured device crossover, the fused device epoch above it — see
+        :meth:`allocate_batched`).
         """
         if batched:
             return self.allocate_batched(per_agent_limit,
@@ -275,11 +324,21 @@ class OnlineAllocator:
             grants.append(g)
 
     def allocate_batched(self, per_agent_limit: Optional[int] = None,
-                         tie: str = "low", use_kernel=False) -> list[Grant]:
+                         tie: str = "low", use_kernel="auto",
+                         shards: int = 1) -> list[Grant]:
         """Batched epoch: score once, grant many (see module docstring).
 
-        ``use_kernel`` selects the accelerator backend:
+        ``use_kernel`` selects the backend:
 
+          * ``"auto"`` (default) — pick numpy vs the fused device epoch from
+            (N, J, jax backend) against the crossover measured in
+            ``benchmarks/allocator_bench.py``
+            (:data:`repro.core.engine.AUTO_KERNEL_MIN_CELLS`); below the
+            floor the resolver never imports jax, and RRR always stays on
+            the host path (the fused RRR rng pre-draw would make seeded
+            cross-epoch sequences backend/size-dependent).  Never slower
+            than the old numpy default at the benched sizes (asserted in
+            the bench ``--quick`` smoke).
           * ``True`` / ``"fused"`` — the device-resident epoch engine
             (:mod:`repro.core.engine_jax`): the whole select -> grant ->
             refresh loop runs as ONE jitted ``lax.while_loop`` dispatch.
@@ -292,40 +351,155 @@ class OnlineAllocator:
           * ``"pergrant"`` — the legacy per-grant Pallas ``psdsf_score``
             backend (one kernel launch + readback per pick; characterized
             rPS-DSF + pooled only), kept for benchmarking the boundary cost.
-          * ``False`` — pure numpy incremental epoch (default).
+          * ``False`` — pure numpy incremental epoch.
+
+        ``shards > 1`` partitions the fused epoch's in-loop selects across
+        agent shards (parity-gated; see the engine_jax module docstring).
+
+        Implemented as ``commit_epoch(begin_epoch(...))`` — the synchronous
+        path and the asynchronous pipeline are the same code.
         """
+        return self.commit_epoch(self.begin_epoch(
+            per_agent_limit, tie=tie, use_kernel=use_kernel, shards=shards))
+
+    # -- the asynchronous epoch pipeline -------------------------------------
+
+    def _resolve_kernel(self, use_kernel, N: int, J: int, tie: str):
+        """Resolve a ``use_kernel`` spec to ``False | "pergrant" | "fused"``."""
+        if use_kernel in (False, None):
+            return False
+        if use_kernel == "pergrant":
+            return "pergrant"
+        if use_kernel in (True, "fused"):
+            from repro.core import engine_jax
+
+            return "fused" if engine_jax.supports(
+                self.crit, self.server_policy, self.mode, tie) else False
+        if use_kernel == "auto":
+            if N * J < AUTO_KERNEL_FLOOR_CELLS:
+                return False        # small epoch: never pay the jax import
+            if self.server_policy == "rrr":
+                # the fused RRR path pre-draws a whole permutation budget
+                # from the shared rng, so ACROSS epochs its stream position
+                # differs from the numpy policy's — auto must never make a
+                # seeded run's grant sequences depend on backend or cluster
+                # size.  Fused RRR stays an explicit opt-in.
+                return False
+            try:
+                import jax
+
+                from repro.core import engine_jax
+            except ImportError:
+                return False    # jax-less install: numpy epochs everywhere
+            if not engine_jax.supports(self.crit, self.server_policy,
+                                       self.mode, tie):
+                return False
+            min_cells = AUTO_KERNEL_MIN_CELLS.get(
+                jax.default_backend(), AUTO_KERNEL_MIN_CELLS["default"])
+            return "fused" if N * J >= min_cells else False
+        raise ValueError(f"unknown use_kernel spec {use_kernel!r}")
+
+    def begin_epoch(self, per_agent_limit: Optional[int] = None,
+                    tie: str = "low", use_kernel="auto",
+                    shards: int = 1) -> InFlightEpoch:
+        """Stage one epoch and dispatch it without blocking on the result.
+
+        Freezes the epoch inputs (X/D/C/FREE/phi/allowed/wanted + the true
+        demands) into an immutable :meth:`ClusterState.epoch_view` snapshot
+        — the upload half of the double buffer — and, when the
+        configuration is served by the fused device engine, dispatches the
+        epoch asynchronously (``engine_jax.run_epoch_async``).  All
+        allocator-rng consumption (the fused RRR permutation pre-draw)
+        happens HERE, so begin/commit pairs consume the stream exactly like
+        the synchronous path.  Configurations outside device coverage run
+        the host engine eagerly at begin time (no overlap, same contract).
+
+        The caller must :meth:`commit_epoch` before mutating the allocator
+        again; the live state may serve reads while the epoch is in flight.
+        At most ONE epoch may be in flight per allocator — overlapping
+        begins would interleave rng consumption (an RRR replay top-up of
+        epoch k draws after epoch k+1's pre-draw) and break the sequence
+        contract, so they are refused here.
+        """
+        if self._inflight_epoch is not None:
+            raise RuntimeError("an allocation epoch is already in flight; "
+                               "commit_epoch() it before beginning another")
         if not self.frameworks or self.state.n_agents == 0:
-            return []
-        view = self.state.sorted_view()
+            return InFlightEpoch(view=None, TD=None,
+                                 per_agent_limit=per_agent_limit, grants=[],
+                                 guard=self.state.mutation_count)
+        view = self.state.epoch_view()
         N = len(view.fids)
         TD = np.zeros((N, self.R))
         for i, f in enumerate(view.fids):
             fw = self.frameworks[f]
             if fw.n_tasks < fw.wanted_tasks:
                 TD[i] = self._true_demand(f)
-        if use_kernel in (True, "fused"):
+        TD.setflags(write=False)
+        kernel = self._resolve_kernel(use_kernel, N, len(view.agents), tie)
+        if kernel == "fused":
             from repro.core import engine_jax
 
-            if engine_jax.supports(self.crit, self.server_policy,
-                                   self.mode, tie):
-                seq = engine_jax.run_epoch(
-                    self.crit, self.server_policy,
-                    X=view.X, D=view.D, C=view.C, FREE=view.FREE,
-                    phi=view.phi, allowed=view.allowed, wanted=view.wanted,
-                    true_demands=TD, per_agent_limit=per_agent_limit,
-                    lookahead=False, rng=self.rng,
-                )
-                grants = []
-                for n, j in seq:
-                    # re-validate in f64 before mutating host state: the
-                    # device loop tracks FREE in f32, which is exact for
-                    # quantized demands but can drift for non-dyadic ones —
-                    # never let a drifted grant drive free capacity negative.
-                    slot = self.state.agent2slot[view.agents[j]]
-                    if (TD[n] > self.state.FREE[slot] + 1e-9).any():
-                        break
-                    grants.append(self._grant(view.fids[n], view.agents[j]))
-                return grants
+            handle = engine_jax.run_epoch_async(
+                self.crit, self.server_policy,
+                X=view.X, D=view.D, C=view.C, FREE=view.FREE,
+                phi=view.phi, allowed=view.allowed, wanted=view.wanted,
+                true_demands=TD, per_agent_limit=per_agent_limit,
+                lookahead=False, rng=self.rng, shards=shards,
+            )
+            epoch = InFlightEpoch(view=view, TD=TD,
+                                  per_agent_limit=per_agent_limit,
+                                  handle=handle,
+                                  guard=self.state.mutation_count)
+            self._inflight_epoch = epoch
+            return epoch
+        grants = self._allocate_batched_host(per_agent_limit, tie, kernel,
+                                             view, TD)
+        return InFlightEpoch(view=view, TD=TD,
+                             per_agent_limit=per_agent_limit, grants=grants,
+                             guard=self.state.mutation_count)
+
+    def commit_epoch(self, epoch: InFlightEpoch) -> list[Grant]:
+        """Commit an in-flight epoch: block on the device grant sequence,
+        re-validate each grant in f64 against the LIVE state and apply it
+        incrementally.  Bit-for-bit identical to the synchronous path (which
+        is begin+commit back to back).  Raises if the cluster state was
+        mutated since :meth:`begin_epoch` — the commit point is the caller's
+        contract, not something this method can reorder around.  (The
+        staleness guard protects DEFERRED application, so it applies to
+        device epochs only: a host-fallback epoch already applied its
+        grants at begin time, making later mutations as legal as they are
+        after any synchronous epoch.)"""
+        if epoch.consumed:
+            raise RuntimeError("epoch handle already committed")
+        epoch.consumed = True
+        if self._inflight_epoch is epoch:
+            self._inflight_epoch = None
+        if epoch.grants is not None:   # host fallback: applied at begin time
+            return epoch.grants
+        if self.state.mutation_count != epoch.guard:
+            raise RuntimeError(
+                "cluster state mutated while an allocation epoch was in "
+                "flight; commit_epoch() must run before any other allocator "
+                "mutation")
+        seq = epoch.handle.result()
+        grants: list[Grant] = []
+        for n, j in seq:
+            # re-validate in f64 before mutating host state: the device
+            # loop tracks FREE in f32, which is exact for quantized demands
+            # but can drift for non-dyadic ones — never let a drifted grant
+            # drive free capacity negative.
+            slot = self.state.agent2slot[epoch.view.agents[j]]
+            if (epoch.TD[n] > self.state.FREE[slot] + 1e-9).any():
+                break
+            grants.append(self._grant(epoch.view.fids[n],
+                                      epoch.view.agents[j]))
+        return grants
+
+    def _allocate_batched_host(self, per_agent_limit, tie, kernel,
+                               view, TD) -> list[Grant]:
+        """The numpy incremental epoch (optionally the per-grant Pallas
+        backend) over a frozen view — the host half of the epoch pipeline."""
         usage = None
         if self.mode == "oblivious":
             usage = np.array([self.frameworks[f].usage for f in view.fids])
@@ -335,7 +509,7 @@ class OnlineAllocator:
             allowed=view.allowed, wanted=view.wanted, true_demands=TD,
             mode=self.mode, lookahead=False, tie=tie, rng=self.rng,
             bf_metric=self.bf_metric, per_agent_limit=per_agent_limit,
-            usage=usage, use_kernel=bool(use_kernel),
+            usage=usage, use_kernel=(kernel == "pergrant"),
         )
         grants: list[Grant] = []
         passes_d = self.crit.server_specific and self.mode == "oblivious"

@@ -22,7 +22,26 @@ The allocator is :class:`repro.core.online.OnlineAllocator`, so every
 (criterion x server-policy x mode) combination from the paper is runnable;
 ``SimConfig.batched=True`` routes epochs through the incremental
 :class:`~repro.core.engine.BatchedEpoch` engine
-(:func:`assert_batched_parity` pins it against the legacy per-grant path).
+(:func:`assert_batched_parity` pins it against the legacy per-grant path),
+with ``use_kernel`` choosing the epoch backend (default ``"auto"``).
+
+Asynchronous epochs (``SimConfig.async_epochs=True``, requires batched):
+an allocation event *dispatches* the device epoch
+(``OnlineAllocator.begin_epoch``) and returns to the event loop without
+blocking on the grant readback.  The COMMIT POINT is deterministic: the
+in-flight epoch is committed before the next popped event is processed
+(the event is pushed back with its original sequence number and re-popped,
+since committing may insert earlier events), while ``now`` still equals
+the dispatching epoch's time.  Grant application, hooks, executor dispatch
+and telemetry sampling therefore happen at exactly the simulated time —
+and in exactly the event order — of the synchronous path, so traces are
+bit-for-bit identical (pinned by tests/test_async_pipeline.py against the
+golden scenario grid).  Exactness bounds the in-sim overlap window to the
+heap turnaround: every DES event either observes grant effects or races
+the allocator's pending-cycle bookkeeping, so none may run mid-flight (the
+epoch-scale throughput win comes from pipelining epochs of independent
+allocators through the same begin/commit protocol — measured in
+``benchmarks/allocator_bench.py`` ``device-async`` rows).
 """
 from __future__ import annotations
 
@@ -63,6 +82,11 @@ class SimConfig:
     batched: bool = False                # batched epoch engine (score once per
                                          # cycle + incremental updates) instead
                                          # of the legacy per-grant recompute
+    use_kernel: object = "auto"          # batched epoch backend (see
+                                         # OnlineAllocator.allocate_batched)
+    async_epochs: bool = False           # overlap device epochs with the event
+                                         # loop (deterministic commit points;
+                                         # requires batched=True)
     seed: int = 0
 
 
@@ -149,6 +173,9 @@ class SparkMesosSim:
         late registrations; failures: optional [(time, name)] agent failures;
         hooks: optional metrics.SimHook sequence."""
         self.cfg = cfg
+        if cfg.async_epochs and not cfg.batched:
+            raise ValueError("async_epochs requires batched=True (the "
+                             "per-grant path has no dispatch/commit split)")
         self.rng = np.random.default_rng(cfg.seed)
         if isinstance(workload, dict):
             workload = SyntheticQueueSource(
@@ -175,6 +202,7 @@ class SparkMesosSim:
         self._eid = itertools.count()
         self._alloc_pending = False
         self._pending_arrivals = 0       # scheduled but not yet submitted
+        self._inflight = None            # async mode: dispatched, uncommitted
 
         for name, cap in agents:
             self.alloc.add_agent(name, cap)
@@ -300,8 +328,21 @@ class SparkMesosSim:
                 self.alloc.set_wanted(fid, 0)
         for jid, job in self.jobs.items():
             self.alloc.set_wanted(jid, self._wanted(job))
+        if self.cfg.async_epochs:
+            # dispatch only: the device epoch runs while the event loop
+            # keeps moving; _commit_inflight applies the grants at the
+            # deterministic commit point (before the next processed event,
+            # with `now` still at this epoch's time).
+            self._inflight = self.alloc.begin_epoch(
+                per_agent_limit=self.cfg.offers_per_agent,
+                use_kernel=self.cfg.use_kernel)
+            return
         grants = self.alloc.allocate(per_agent_limit=self.cfg.offers_per_agent,
-                                     batched=self.cfg.batched)
+                                     batched=self.cfg.batched,
+                                     use_kernel=self.cfg.use_kernel)
+        self._apply_grants(grants)
+
+    def _apply_grants(self, grants):
         for g in grants:
             job = self.jobs[g.fid]
             for _ in range(g.n_executors):
@@ -315,6 +356,13 @@ class SparkMesosSim:
         if grants:
             self._mark_dirty()  # keep cycling while offers land (ramp-up)
         self._sample()
+
+    def _commit_inflight(self):
+        """Commit the in-flight epoch.  `self.now` still equals the
+        dispatching epoch's time (no event has been processed since), so
+        grant effects land at exactly the synchronous path's timestamps."""
+        epoch, self._inflight = self._inflight, None
+        self._apply_grants(self.alloc.commit_epoch(epoch))
 
     # ---------------------------------------------------------------- events
 
@@ -373,8 +421,23 @@ class SparkMesosSim:
             else:
                 self._schedule_arrival(arrival)
         self._allocate_and_dispatch()
-        while self.events and self.now <= until:
-            t, _s, kind, payload = heapq.heappop(self.events)
+        while self.now <= until:
+            if not self.events:
+                if self._inflight is None:
+                    break
+                self._commit_inflight()   # its grants may push events
+                continue
+            ev = heapq.heappop(self.events)
+            if self._inflight is not None:
+                # deterministic commit point: apply the in-flight epoch
+                # before processing ANY event.  Committing may insert
+                # events earlier than `ev`, so push it back (the original
+                # tuple — its sequence number keeps same-time ordering
+                # stable) and re-pop.
+                heapq.heappush(self.events, ev)
+                self._commit_inflight()
+                continue
+            t, _s, kind, payload = ev
             self.now = t
             if kind == "task_done":
                 self._on_task_done(*payload)
@@ -407,6 +470,8 @@ class SparkMesosSim:
                 self._on_agent_down(payload)
             if self._pending_arrivals == 0 and not self.jobs:
                 break
+        if self._inflight is not None:   # loop ended mid-flight: commit now
+            self._commit_inflight()
         self._sample()
         for h in self.hooks:
             h.on_end(self.now)
