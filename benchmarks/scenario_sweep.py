@@ -8,6 +8,13 @@ heavy-tailed interarrivals, and a Spark-style trace replay — and records,
 per cell: makespan, time-weighted utilization, Jain's fairness index over
 time (trajectory + time-weighted mean/min) and per-group job slowdowns.
 
+Every (workload, criterion, policy, seed) cell runs twice, with preemption
+OFF and ON (revocable offers + the epoch-level preemption pass of
+``repro.core.preemption``): the on-cells additionally record executor
+revocations and wasted task-seconds, so the trajectory document captures
+the fairness-vs-wasted-work tradeoff (Jain-over-time under churn improves,
+paid for in revoked in-flight work) per criterion.
+
 All cells run the incremental batched epoch engine (``batched=True``; the
 per-grant legacy path is available via ``--pergrant`` for comparison) —
 ``run_paper_experiment`` asserts engine parity on first use.
@@ -37,7 +44,7 @@ import time
 
 import numpy as np
 
-from repro.core.metrics import FairnessTimelineHook, SlowdownHook
+from repro.core.metrics import FairnessTimelineHook, PreemptionHook, SlowdownHook
 from repro.core.simulator import PI, WC, run_paper_experiment
 from repro.core.workloads import (
     SyntheticQueueSource,
@@ -79,22 +86,23 @@ def _downsample(t, v, max_points: int = 64):
     return t[idx].tolist(), v[idx].tolist()
 
 
-def _cell(workload_name, criterion, policy, seed, batched, quick):
+def _cell(workload_name, criterion, policy, seed, batched, quick, preempt):
     """One grid cell.  Takes only picklable primitives (the workload builder
     is re-resolved by name) so cells can run in worker processes."""
     builder = _workload_builders(quick)[workload_name]
     t0 = time.perf_counter()
-    fair, slow = FairnessTimelineHook(), SlowdownHook()
+    fair, slow, pre = FairnessTimelineHook(), SlowdownHook(), PreemptionHook()
     r = run_paper_experiment(
         criterion, "characterized", server_policy=policy, seed=seed,
-        batched=batched, workload=builder(), hooks=[fair, slow],
+        batched=batched, workload=builder(), hooks=[fair, slow, pre],
+        preemption=preempt,
     )
     wall = time.perf_counter() - t0
     f = fair.summary()
     ts, js = _downsample(*fair.jain_series())
     return {
         "workload": workload_name, "criterion": criterion, "policy": policy,
-        "seed": seed,
+        "seed": seed, "preemption": bool(preempt),
         "makespan": r.makespan,
         "wall_s": wall,
         "used_cpu": r.mean_used(0), "used_mem": r.mean_used(1),
@@ -104,6 +112,10 @@ def _cell(workload_name, criterion, policy, seed, batched, quick):
         "jain_series": {"t": ts, "jain": js},
         "slowdown": slow.summary(),
         "n_jobs": sum(len(v) for v in r.job_durations.values()),
+        # preemption telemetry comes from the hook (the SimResult counters
+        # are the same numbers — pinned equal in tests/test_preemption.py)
+        **pre.summary(),
+        "tasks_requeued_on_revoke": r.tasks_requeued_on_revoke,
     }
 
 
@@ -122,11 +134,12 @@ def _warm_worker():
 
 def run(criteria=None, policies=None, seeds=None, quick: bool = False,
         batched: bool = True, jobs: int = 1, out: str | None = None,
-        print_csv: bool = True) -> dict:
+        print_csv: bool = True, preemption=(False, True)) -> dict:
     """``quick`` shrinks the grid (CI-sized) but never overrides an
     explicitly passed criteria/policies/seeds.  ``jobs > 1`` fans the
     independent cells out over a process pool (per-cell seeds, fresh
-    workload instances — no shared state)."""
+    workload instances — no shared state).  ``preemption`` is the
+    revocable-offers axis: every cell runs once per value."""
     if criteria is None:
         criteria = ("drf", "psdsf", "rpsdsf") if quick else \
             ("drf", "tsf", "psdsf", "rpsdsf")
@@ -135,11 +148,12 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
     if seeds is None:
         seeds = (0,) if quick else (0, 1)
     builders = _workload_builders(quick)
-    cells = [(wname, crit, pol, seed, batched, quick)
+    cells = [(wname, crit, pol, seed, batched, quick, pre)
              for wname in builders
              for crit in criteria
              for pol in policies
-             for seed in seeds]
+             for seed in seeds
+             for pre in preemption]
     if jobs == 1:
         _warm_worker()          # outside the timer, like the pool workers
     t0 = time.perf_counter()
@@ -157,17 +171,20 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
         "warm_workers": True,
         "sweep_wall_s": sweep_wall,
         "grid": {"workloads": list(builders), "criteria": list(criteria),
-                 "policies": list(policies), "seeds": list(seeds)},
+                 "policies": list(policies), "seeds": list(seeds),
+                 "preemption": [bool(p) for p in preemption]},
         "results": results,
     }
     if print_csv:
-        print("workload,criterion,policy,seed,makespan,used_cpu,"
-              "jain_tw,jain_min,worst_p95_slowdown,wall_s")
+        print("workload,criterion,policy,seed,preempt,makespan,used_cpu,"
+              "jain_tw,jain_min,worst_p95_slowdown,revoked,wasted_s,wall_s")
         for r in results:
             worst = max((g["p95"] for g in r["slowdown"].values()), default=0.0)
             print(f"{r['workload']},{r['criterion']},{r['policy']},{r['seed']},"
+                  f"{int(r['preemption'])},"
                   f"{r['makespan']:.1f},{r['used_cpu']:.3f},"
                   f"{r['jain_tw_mean']:.3f},{r['jain_min']:.3f},{worst:.2f},"
+                  f"{r['executors_revoked']},{r['revoked_wasted_s']:.1f},"
                   f"{r['wall_s']:.2f}")
         print(f"# {len(results)} cells in {sweep_wall:.1f}s "
               f"(jobs={jobs})")

@@ -7,6 +7,9 @@ incrementally on register/deregister/grant/release/agent-churn, in the spirit
 of Mesos's own sorter (incremental per-client shares):
 
   X    (N, J)  executors of framework-slot n on agent-slot j
+  Xr   (N, J)  the REVOCABLE subset of X (grants made past the framework's
+               phi-weighted fair share; Xr <= X elementwise) — the
+               preemption pass's victim ledger
   D    (N, R)  scoring demands (declared, or inferred in oblivious mode)
   C    (J, R)  agent capacities
   FREE (J, R)  agent free resources
@@ -46,6 +49,7 @@ class StateView(NamedTuple):
     phi: np.ndarray      # (N,)
     allowed: np.ndarray  # (N, J) bool
     wanted: np.ndarray   # (N,)
+    Xr: np.ndarray = None  # (N, J) revocable subset of X (see module doc)
 
 
 class ClusterState:
@@ -57,6 +61,7 @@ class ClusterState:
         self._nf = fw_capacity
         self._na = agent_capacity
         self.X = np.zeros((fw_capacity, agent_capacity))
+        self.Xr = np.zeros((fw_capacity, agent_capacity))
         self.D = np.zeros((fw_capacity, n_resources))
         self.C = np.zeros((agent_capacity, n_resources))
         self.FREE = np.zeros((agent_capacity, n_resources))
@@ -83,6 +88,7 @@ class ClusterState:
     def _grow_frameworks(self):
         new = self._nf * 2
         self.X = np.vstack([self.X, np.zeros((self._nf, self._na))])
+        self.Xr = np.vstack([self.Xr, np.zeros((self._nf, self._na))])
         self.D = np.vstack([self.D, np.zeros((self._nf, self.R))])
         self.phi = np.concatenate([self.phi, np.ones(self._nf)])
         self.wanted = np.concatenate([self.wanted, np.zeros(self._nf)])
@@ -93,6 +99,7 @@ class ClusterState:
     def _grow_agents(self):
         new = self._na * 2
         self.X = np.hstack([self.X, np.zeros((self._nf, self._na))])
+        self.Xr = np.hstack([self.Xr, np.zeros((self._nf, self._na))])
         self.C = np.vstack([self.C, np.zeros((self._na, self.R))])
         self.FREE = np.vstack([self.FREE, np.zeros((self._na, self.R))])
         self.allowed = np.hstack([self.allowed, np.ones((self._nf, self._na), bool)])
@@ -126,6 +133,7 @@ class ClusterState:
         self.C[j] = cap
         self.FREE[j] = cap
         self.X[:, j] = 0.0
+        self.Xr[:, j] = 0.0
         # placement constraints are name-based: refresh the new column
         for slot, names in self._fw_allowed_names.items():
             self.allowed[slot, j] = names is None or name in names
@@ -139,6 +147,7 @@ class ClusterState:
         self.C[j] = 0.0
         self.FREE[j] = 0.0
         self.X[:, j] = 0.0
+        self.Xr[:, j] = 0.0
         self.allowed[:, j] = True
         self._free_agent_slots.append(j)
         self._version += 1
@@ -163,6 +172,7 @@ class ClusterState:
         self.phi[n] = float(phi)
         self.wanted[n] = float(wanted)
         self.X[n, :] = 0.0
+        self.Xr[n, :] = 0.0
         names = None if allowed_agents is None else frozenset(allowed_agents)
         self._fw_allowed_names[n] = names
         if names is None:
@@ -182,6 +192,7 @@ class ClusterState:
         self.phi[n] = 1.0
         self.wanted[n] = 0.0
         self.X[n, :] = 0.0
+        self.Xr[n, :] = 0.0
         self.allowed[n, :] = True
         self._fw_allowed_names.pop(n, None)
         self._free_fw_slots.append(n)
@@ -191,15 +202,36 @@ class ClusterState:
 
     # -- incremental updates (O(R) each) --------------------------------------
 
-    def grant(self, fid: str, agent: str, bundle, n_units: int = 1) -> None:
+    def grant(self, fid: str, agent: str, bundle, n_units: int = 1,
+              revocable_units: int = 0) -> None:
         n, j = self.fid2slot[fid], self.agent2slot[agent]
         self.X[n, j] += n_units
+        self.Xr[n, j] += revocable_units
         self.FREE[j] -= bundle
         self.mutation_count += 1
 
-    def release(self, fid: str, agent: str, bundle, n_units: int = 1) -> None:
+    def release(self, fid: str, agent: str, bundle, n_units: int = 1,
+                revocable_units: int = 0) -> None:
         n, j = self.fid2slot[fid], self.agent2slot[agent]
         self.X[n, j] -= n_units
+        self.Xr[n, j] -= revocable_units
+        self.FREE[j] += bundle
+        self.mutation_count += 1
+
+    def revoke(self, fid: str, agent: str, bundle, n_units: int = 1) -> None:
+        """Revoke ``n_units`` REVOCABLE executors of fid on agent: the freed
+        bundle re-enters FREE incrementally (O(R)), both the total and the
+        revocable allocation columns shrink, and ``mutation_count`` ticks —
+        a revocation invalidates an in-flight epoch exactly like any other
+        mutation (the online allocator refuses it outright while an epoch
+        is in flight; see ``OnlineAllocator.revoke_executor``)."""
+        n, j = self.fid2slot[fid], self.agent2slot[agent]
+        if self.Xr[n, j] < n_units:
+            raise ValueError(
+                f"{fid!r} holds only {self.Xr[n, j]:.0f} revocable "
+                f"executors on {agent!r}, cannot revoke {n_units}")
+        self.X[n, j] -= n_units
+        self.Xr[n, j] -= n_units
         self.FREE[j] += bundle
         self.mutation_count += 1
 
@@ -246,6 +278,7 @@ class ClusterState:
             phi=self.phi[f_slots],
             allowed=self.allowed[np.ix_(f_slots, a_slots)],
             wanted=self.wanted[f_slots],
+            Xr=self.Xr[np.ix_(f_slots, a_slots)],
         )
 
     def epoch_view(self) -> StateView:
@@ -256,6 +289,6 @@ class ClusterState:
         that already uploaded them."""
         view = self.sorted_view()
         for arr in (view.X, view.D, view.C, view.FREE, view.phi,
-                    view.allowed, view.wanted):
+                    view.allowed, view.wanted, view.Xr):
             arr.setflags(write=False)
         return view

@@ -143,6 +143,21 @@ def usage_dominant_share(usage, C, phi, *, xp=_np):
     return xp.max(usage / ctot, axis=1) / phi
 
 
+def fair_share_level(phi, *, xp=_np):
+    """Scalar phi-weighted fair level 1 / sum_m phi_m.
+
+    Weighted DRF equalizes the weighted dominant shares s_n =
+    (max_r u_{n,r} / sum_j c_{j,r}) / phi_n; when the dominant resource is
+    fully and fairly divided, every framework sits at s_n = 1 / sum_m phi_m
+    (equivalently, framework n is entitled to the phi_n / sum_m phi_m slice
+    of its dominant resource).  This is the reference level the revocable /
+    firm grant classification and the preemption pass compare against
+    (:mod:`repro.core.preemption`): a framework is OVER share when its
+    weighted dominant share exceeds ``threshold * fair_share_level(phi)``
+    and UNDER when it sits below ``fair_share_level(phi)``."""
+    return 1.0 / xp.maximum(xp.sum(phi), 1e-30)
+
+
 # ---------------------------------------------------------------------------
 # Best-fit server metrics (used by BF-DRF: framework chosen by DRF, then the
 # server "whose residual capacity most closely matches the demand vector").

@@ -20,6 +20,14 @@ Every refresh applies the same elementwise formulas from
 sequence is identical to the exact reference filler's when driven by the
 same :mod:`repro.core.policies` object and RNG stream (verified by the
 parity suite for the paper's binary-exact demand vectors).
+
+Preemption ordering: with revocable offers enabled the epoch-level
+preemption pass (:mod:`repro.core.preemption`) runs — on the host, rng-free
+— BEFORE this engine is constructed, so a ``BatchedEpoch`` always scores
+the post-revocation state; the grant loop itself never revokes.  The
+revocable/firm split of each resulting grant is classified downstream in
+``OnlineAllocator._grant`` (shared by every engine path), so this engine
+needs no preemption-specific state.
 """
 from __future__ import annotations
 

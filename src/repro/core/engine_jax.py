@@ -85,6 +85,15 @@ epoch at a time (``OnlineAllocator.begin_epoch`` refuses overlap).  The
 cross-epoch caveat above (the fused path drawing a fixed permutation
 budget up front) applies to async epochs unchanged.
 
+Preemption and the async protocol: the epoch-level preemption pass
+(:mod:`repro.core.preemption`) runs inside ``begin_epoch`` BEFORE the
+frozen ``epoch_view`` snapshot is taken and the dispatch issued, so the
+device loop always scores the post-revocation state and the
+``mutation_count`` staleness guard is armed after the pass — begin/commit
+semantics are unchanged.  While an epoch is in flight, revocations are
+REFUSED (``OnlineAllocator.revoke_executor`` raises; they are never
+deferred), which is what keeps a dispatched epoch's inputs authoritative.
+
 Sharded select
 --------------
 With ``shards=K > 1`` the in-loop selects partition the padded agent axis

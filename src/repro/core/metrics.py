@@ -131,19 +131,60 @@ class SimHook:
                   n_tasks: int) -> None:
         pass
 
+    def on_revoke(self, t: float, revocations, wasted_s: float) -> None:
+        """Preemption: a batch of executor revocations was applied.
+        ``revocations`` is the epoch's ordered
+        :class:`~repro.core.preemption.Revocation` list; ``wasted_s`` is the
+        task-seconds of in-flight work thrown away by this batch.  Only
+        called for non-empty batches, so hook streams with preemption off
+        are identical to pre-preemption runs."""
+        pass
+
     def on_end(self, t: float) -> None:
         pass
 
 
 class GrantLogHook(SimHook):
     """Records the exact grant sequence (fid, agent, n_executors) — the
-    engine-parity witness used by ``assert_batched_parity``."""
+    engine-parity witness used by ``assert_batched_parity`` — and, with
+    preemption enabled, the revocation sequence alongside."""
 
     def __init__(self):
         self.grants: list = []
+        self.revoked: list = []
 
     def on_grant(self, t, grants) -> None:
         self.grants.extend((g.fid, g.agent, g.n_executors) for g in grants)
+
+    def on_revoke(self, t, revocations, wasted_s) -> None:
+        self.revoked.extend((r.fid, r.agent, r.n_executors)
+                            for r in revocations)
+
+
+class PreemptionHook(SimHook):
+    """Preemption telemetry: revocation counts, wasted work, and the
+    cumulative-revocations-over-time series (churn pressure)."""
+
+    def __init__(self):
+        self.t: list = []
+        self.cumulative: list = []
+        self.n_revocations = 0
+        self.executors_revoked = 0
+        self.wasted_s = 0.0
+
+    def on_revoke(self, t, revocations, wasted_s) -> None:
+        self.n_revocations += len(revocations)
+        self.executors_revoked += sum(r.n_executors for r in revocations)
+        self.wasted_s += float(wasted_s)
+        self.t.append(t)
+        self.cumulative.append(self.executors_revoked)
+
+    def summary(self) -> dict:
+        return {
+            "n_revocations": self.n_revocations,
+            "executors_revoked": self.executors_revoked,
+            "revoked_wasted_s": self.wasted_s,
+        }
 
 
 class UtilizationTimelineHook(SimHook):

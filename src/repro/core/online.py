@@ -40,6 +40,20 @@ picked from (N, J, jax backend) against the crossover measured in
 small clusters never pay a device dispatch and fleet-scale epochs never run
 the host loop.
 
+Revocable offers & preemption (:mod:`repro.core.preemption`): with a
+``preemption=PreemptionPolicy(...)`` the allocator classifies every grant at
+grant time — grants made while the framework stays under its phi-weighted
+fair share (``criteria.fair_share_level``) are FIRM, grants that push it
+over are REVOCABLE (tracked in ``ClusterState.Xr``) — and every allocation
+epoch starts with a preemption pass: when a starved under-share framework's
+demand fits no allowed agent, revocable executors of the most-over-share
+frameworks (victim order = the shared criterion scores, max first) are
+revoked one at a time until the starved framework fits.  The pass runs
+BEFORE the grant loop on every path (per-grant, batched, fused device,
+async begin/commit), so revoke+grant sequences are engine-independent;
+revocations of an epoch are surfaced in :attr:`last_revocations` (and on
+the ``InFlightEpoch``).  Characterized mode only.
+
 Asynchronous epochs (the double-buffered pipeline): :meth:`begin_epoch`
 freezes the epoch inputs into an immutable upload view
 (``ClusterState.epoch_view``) and dispatches the fused device epoch WITHOUT
@@ -60,6 +74,7 @@ from typing import Callable, NamedTuple, Optional
 import numpy as np
 
 from repro.core import criteria
+from repro.core import preemption as _preemption
 from repro.core.cluster_state import ClusterState, StateView
 from repro.core.engine import (
     AUTO_KERNEL_FLOOR_CELLS,
@@ -93,6 +108,7 @@ class FrameworkState:
     grants: int = 0                     # number of accepted offers
     phi: float = 1.0                    # priority weight
     allowed_agents: Optional[set] = None  # placement constraints (None = any)
+    revocable: dict = dataclasses.field(default_factory=dict)  # agent -> count
 
     @property
     def n_tasks(self) -> int:
@@ -111,6 +127,8 @@ class Grant:
     agent: str
     bundle: np.ndarray          # resources handed over
     n_executors: int            # executors the framework carved out of it
+    revocable: bool = False     # pushed the framework over its fair share
+                                # (preemption enabled only; see preemption.py)
 
 
 @dataclasses.dataclass
@@ -131,6 +149,10 @@ class InFlightEpoch:
     grants: Optional[list] = None       # host fallback: applied at begin
     guard: int = 0                      # ClusterState.mutation_count at begin
     consumed: bool = False
+    revocations: list = dataclasses.field(default_factory=list)
+    # ^ the epoch's preemption-pass output: revocations happen at BEGIN time
+    #   (before the view freeze / device dispatch), the caller learns them
+    #   here so async consumers can apply kill effects at the commit point.
 
     @property
     def in_flight(self) -> bool:
@@ -148,11 +170,18 @@ class OnlineAllocator:
         mode: str = "characterized",     # characterized | oblivious
         bf_metric: str = "cosine",
         seed: int = 0,
+        preemption=None,                 # None | True | PreemptionPolicy
     ):
         if mode not in ("characterized", "oblivious"):
             raise ValueError(mode)
         if server_policy not in ("rrr", "pooled", "bestfit"):
             raise ValueError(f"unknown server policy {server_policy!r}")
+        self.preemption = _preemption.get_policy(preemption)
+        if self.preemption is not None and mode != "characterized":
+            raise ValueError("preemption requires characterized mode: the "
+                             "oblivious allocator cannot detect starvation "
+                             "(no true demands) and coarse offers free "
+                             "slack via deregistration, not revocation")
         self.R = n_resources
         self.crit = criteria.get_criterion(criterion)
         self.criterion = self.crit.name
@@ -163,6 +192,9 @@ class OnlineAllocator:
         self.state = ClusterState(n_resources)
         self.frameworks: dict[str, FrameworkState] = {}
         self._inflight_epoch: Optional[InFlightEpoch] = None
+        self._fair_cache = None   # (state._version, ctot, level) memo
+        #: revocations of the most recent allocation epoch's preemption pass
+        self.last_revocations: list = []
 
     # -- dict-style views (read-only; canonical data is in self.state) -------
 
@@ -194,6 +226,7 @@ class OnlineAllocator:
         lost = []
         for fw in self.frameworks.values():
             bundles = fw.tasks.pop(name, [])
+            fw.revocable.pop(name, None)
             s = fw.slack.pop(name, None)
             if s is not None:
                 fw.usage -= s
@@ -238,9 +271,44 @@ class OnlineAllocator:
         fw = self.frameworks[fid]
         bundle = fw.tasks[agent].pop()
         fw.usage -= bundle
+        # voluntary releases drain the REVOCABLE ledger first: revocable
+        # grants are the newest (over-share) ones, so a framework shedding
+        # executors sheds its preemption exposure before its firm holdings.
+        rev_units = 0
+        if fw.revocable.get(agent, 0) > 0:
+            fw.revocable[agent] -= 1
+            rev_units = 1
         if agent in self.state.agent2slot:
-            self.state.release(fid, agent, bundle)
+            self.state.release(fid, agent, bundle, revocable_units=rev_units)
         self._sync_demand(fid)
+
+    def revoke_executor(self, fid: str, agent: str):
+        """Revoke one REVOCABLE executor of fid on agent (preemption).
+
+        The mechanical half of the preemption pass — also callable directly
+        (an operator forcibly reclaiming over-share resources).  REFUSED
+        while an allocation epoch is in flight: a revocation mutates FREE,
+        which would invalidate the frozen epoch inputs and trip the
+        ``mutation_count`` guard at commit anyway — failing here, at the
+        mutation, is the pinned semantics (revocations are never deferred;
+        commit the epoch first, then revoke).  Returns the
+        :class:`~repro.core.preemption.Revocation`."""
+        if self._inflight_epoch is not None:
+            raise RuntimeError(
+                "revocation refused: an allocation epoch is in flight; "
+                "commit_epoch() it before revoking (revocations are "
+                "refused, not deferred)")
+        fw = self.frameworks[fid]
+        if fw.revocable.get(agent, 0) <= 0:
+            raise ValueError(
+                f"{fid!r} holds no revocable executors on {agent!r}")
+        bundle = fw.tasks[agent].pop()
+        fw.usage -= bundle
+        fw.revocable[agent] -= 1
+        self.state.revoke(fid, agent, bundle)
+        self._sync_demand(fid)
+        return _preemption.Revocation(fid=fid, agent=agent, bundle=bundle,
+                                      n_executors=1)
 
     def set_wanted(self, fid: str, wanted_tasks: int) -> None:
         self.frameworks[fid].wanted_tasks = wanted_tasks
@@ -287,6 +355,44 @@ class OnlineAllocator:
 
     # -- allocation epoch ----------------------------------------------------
 
+    def _preempt_pass(self) -> list:
+        """Run the epoch-level preemption pass (no-op when disabled); the
+        revocations also land in :attr:`last_revocations`."""
+        if (self.preemption is None or not self.frameworks
+                or self.state.n_agents == 0):
+            self.last_revocations = []
+        else:
+            self.last_revocations = _preemption.preempt_pass(self)
+        return self.last_revocations
+
+    def _fair_consts(self):
+        """(ctot (1, R), fair level) for the revocability test — epoch
+        invariants (they change only on membership mutations, which bump
+        ``ClusterState._version``), cached so the per-grant classification
+        stays O(R) instead of re-summing capacities and phis per grant."""
+        cache = self._fair_cache
+        if cache is None or cache[0] != self.state._version:
+            slots = list(self.state.agent2slot.values())
+            ctot = (np.sum(self.state.C[slots], axis=0, keepdims=True)
+                    if slots else None)
+            phis = np.fromiter((f.phi for f in self.frameworks.values()),
+                               np.float64, len(self.frameworks))
+            level = criteria.fair_share_level(phis) if len(phis) else None
+            cache = (self.state._version, ctot, level)
+            self._fair_cache = cache
+        return cache[1], cache[2]
+
+    def _grant_is_revocable(self, fw, usage_after: np.ndarray) -> bool:
+        """Would this grant leave fw OVER threshold * its phi-weighted fair
+        share?  (criteria owns the share math — see fair_share_level.)"""
+        ctot, level = self._fair_consts()
+        if ctot is None or level is None:
+            return False
+        share = criteria.usage_dominant_share(
+            usage_after[None, :], ctot, np.asarray([fw.phi]))[0]
+        return bool(share > self.preemption.threshold * level
+                    + self.preemption.eps)
+
     def allocate(self, per_agent_limit: Optional[int] = None,
                  batched: bool = False, use_kernel="auto") -> list[Grant]:
         """Run one allocation epoch; returns grants.
@@ -306,6 +412,7 @@ class OnlineAllocator:
         if batched:
             return self.allocate_batched(per_agent_limit,
                                          use_kernel=use_kernel)
+        self._preempt_pass()   # epoch-level pass precedes the grant loop
         grants: list[Grant] = []
         used: dict[str, int] = {}
         guard = 0
@@ -424,10 +531,15 @@ class OnlineAllocator:
         if self._inflight_epoch is not None:
             raise RuntimeError("an allocation epoch is already in flight; "
                                "commit_epoch() it before beginning another")
+        # the preemption pass mutates (revokes) BEFORE the view freeze, so
+        # the dispatched epoch scores the post-revocation state and the
+        # staleness guard below is armed after it.
+        revs = self._preempt_pass()
         if not self.frameworks or self.state.n_agents == 0:
             return InFlightEpoch(view=None, TD=None,
                                  per_agent_limit=per_agent_limit, grants=[],
-                                 guard=self.state.mutation_count)
+                                 guard=self.state.mutation_count,
+                                 revocations=revs)
         view = self.state.epoch_view()
         N = len(view.fids)
         TD = np.zeros((N, self.R))
@@ -450,14 +562,16 @@ class OnlineAllocator:
             epoch = InFlightEpoch(view=view, TD=TD,
                                   per_agent_limit=per_agent_limit,
                                   handle=handle,
-                                  guard=self.state.mutation_count)
+                                  guard=self.state.mutation_count,
+                                  revocations=revs)
             self._inflight_epoch = epoch
             return epoch
         grants = self._allocate_batched_host(per_agent_limit, tie, kernel,
                                              view, TD)
         return InFlightEpoch(view=view, TD=TD,
                              per_agent_limit=per_agent_limit, grants=grants,
-                             guard=self.state.mutation_count)
+                             guard=self.state.mutation_count,
+                             revocations=revs)
 
     def commit_epoch(self, epoch: InFlightEpoch) -> list[Grant]:
         """Commit an in-flight epoch: block on the device grant sequence,
@@ -607,12 +721,23 @@ class OnlineAllocator:
             n_exec = max(1, min(fit, fw.wanted_tasks - fw.n_tasks))
             bundle = offer
             fw.slack[agent] = fw.slack.get(agent, np.zeros(self.R)) + (offer - d * n_exec)
-        self.state.grant(fid, agent, bundle, n_exec)
+        # revocable-offer classification (preemption enabled only): a grant
+        # that pushes fw OVER threshold * its phi-weighted fair share is
+        # revocable; every grant under it is firm.  All grant paths
+        # (per-grant, batched host, device commit) funnel through here, so
+        # classification parity across engines is free.
+        revocable = (self.preemption is not None
+                     and self._grant_is_revocable(fw, fw.usage + bundle))
+        if revocable:
+            fw.revocable[agent] = fw.revocable.get(agent, 0) + n_exec
+        self.state.grant(fid, agent, bundle, n_exec,
+                         revocable_units=n_exec if revocable else 0)
         fw.tasks.setdefault(agent, []).extend([d.copy()] * n_exec)
         fw.usage = fw.usage + bundle
         fw.grants += 1
         self._sync_demand(fid)
-        return Grant(fid=fid, agent=agent, bundle=bundle, n_executors=n_exec)
+        return Grant(fid=fid, agent=agent, bundle=bundle, n_executors=n_exec,
+                     revocable=revocable)
 
     # -- metrics -------------------------------------------------------------
 

@@ -87,6 +87,9 @@ class SimConfig:
     async_epochs: bool = False           # overlap device epochs with the event
                                          # loop (deterministic commit points;
                                          # requires batched=True)
+    preemption: bool = False             # revocable offers + the epoch-level
+                                         # preemption pass (repro.core.preemption)
+    preemption_threshold: float = 1.0    # over-share factor for revocability
     seed: int = 0
 
 
@@ -98,6 +101,9 @@ class SimResult:
     job_durations: dict                  # group -> list[float]
     tasks_speculated: int
     tasks_requeued_on_failure: int
+    executors_revoked: int = 0           # preemption: executors killed
+    tasks_requeued_on_revoke: int = 0    # preemption: busy tasks requeued
+    revoked_wasted_s: float = 0.0        # preemption: task-seconds thrown away
 
     def _series(self, col: int):
         return self.timeline[:, 0], self.timeline[:, col]
@@ -185,9 +191,15 @@ class SparkMesosSim:
             )
         self.workload = workload
         R = workload.n_resources
+        preempt = None
+        if cfg.preemption:
+            from repro.core.preemption import PreemptionPolicy
+
+            preempt = PreemptionPolicy(threshold=cfg.preemption_threshold)
         self.alloc = OnlineAllocator(
             n_resources=R, criterion=cfg.criterion, server_policy=cfg.server_policy,
             mode=cfg.mode, bf_metric=cfg.bf_metric, seed=cfg.seed,
+            preemption=preempt,
         )
         self.alloc.framework_demand_oracle = self._demand_oracle
         self.jobs: dict[str, _Job] = {}
@@ -199,6 +211,9 @@ class SparkMesosSim:
         self.job_durations: dict = {g: [] for g in workload.groups()}
         self.n_spec = 0
         self.n_requeued = 0
+        self.n_revoked = 0               # executors killed by preemption
+        self.n_requeued_on_revoke = 0
+        self.revoked_wasted_s = 0.0
         self._eid = itertools.count()
         self._alloc_pending = False
         self._pending_arrivals = 0       # scheduled but not yet submitted
@@ -332,7 +347,10 @@ class SparkMesosSim:
             # dispatch only: the device epoch runs while the event loop
             # keeps moving; _commit_inflight applies the grants at the
             # deterministic commit point (before the next processed event,
-            # with `now` still at this epoch's time).
+            # with `now` still at this epoch's time).  The preemption pass
+            # ran inside begin_epoch (its revocations ride on the epoch);
+            # executor kills are applied at the commit point too, so async
+            # and sync traces see them at identical times and event order.
             self._inflight = self.alloc.begin_epoch(
                 per_agent_limit=self.cfg.offers_per_agent,
                 use_kernel=self.cfg.use_kernel)
@@ -340,6 +358,7 @@ class SparkMesosSim:
         grants = self.alloc.allocate(per_agent_limit=self.cfg.offers_per_agent,
                                      batched=self.cfg.batched,
                                      use_kernel=self.cfg.use_kernel)
+        self._apply_revocations(self.alloc.last_revocations)
         self._apply_grants(grants)
 
     def _apply_grants(self, grants):
@@ -360,9 +379,62 @@ class SparkMesosSim:
     def _commit_inflight(self):
         """Commit the in-flight epoch.  `self.now` still equals the
         dispatching epoch's time (no event has been processed since), so
-        grant effects land at exactly the synchronous path's timestamps."""
+        grant (and revocation-kill) effects land at exactly the synchronous
+        path's timestamps."""
         epoch, self._inflight = self._inflight, None
-        self._apply_grants(self.alloc.commit_epoch(epoch))
+        grants = self.alloc.commit_epoch(epoch)
+        self._apply_revocations(epoch.revocations)
+        self._apply_grants(grants)
+
+    def _apply_revocations(self, revocations):
+        """Kill the executors behind the epoch's revocations (preemption).
+
+        The allocator already reclaimed the resources; here the *work* is
+        reconciled: per revocation the victim job loses executors on that
+        agent — idle ones first (no work lost; most recently granted first),
+        then busy ones whose current task copy started most recently (least
+        work thrown away; deterministic tie on executor id).  A killed busy
+        copy requeues its task at the queue front when no other copy
+        survives — the restart-after-revoke semantics, same as agent
+        failure — and its elapsed time is charged to ``revoked_wasted_s``.
+        """
+        if not revocations:
+            return
+        wasted = 0.0
+        for rev in revocations:
+            job = self.jobs.get(rev.fid)
+            if job is None:
+                continue   # victim is draining (job done): nothing to kill
+            need = rev.n_executors
+            on_agent = {e for e, a in job.executors.items() if a == rev.agent}
+            idle_here = [e for e in job.idle if e in on_agent]
+            kill = list(reversed(idle_here))[:need]
+            if len(kill) < need:
+                # busy executors: (t_start, eid) per running copy, newest
+                # first — revoke the copy with the least sunk work
+                killed = set(kill)
+                busy = []
+                for tid, copies in job.running.items():
+                    for copy, (eid, t0, _t1) in copies.items():
+                        if eid in on_agent and eid not in killed:
+                            busy.append((-t0, -eid, eid, tid, copy))
+                busy.sort()
+                for _nt0, _ne, eid, tid, copy in busy[:need - len(kill)]:
+                    kill.append(eid)
+                    wasted += self.now - job.running[tid][copy][1]
+                    del job.running[tid][copy]
+                    if not job.running[tid]:
+                        del job.running[tid]
+                        job.unlaunched.insert(0, tid)
+                        self.n_requeued_on_revoke += 1
+            kill_set = set(kill)
+            for e in kill:
+                job.executors.pop(e, None)
+            job.idle = [e for e in job.idle if e not in kill_set]
+            self.n_revoked += len(kill)
+        self.revoked_wasted_s += wasted
+        for h in self.hooks:
+            h.on_revoke(self.now, revocations, wasted)
 
     # ---------------------------------------------------------------- events
 
@@ -483,6 +555,9 @@ class SparkMesosSim:
             job_durations=self.job_durations,
             tasks_speculated=self.n_spec,
             tasks_requeued_on_failure=self.n_requeued,
+            executors_revoked=self.n_revoked,
+            tasks_requeued_on_revoke=self.n_requeued_on_revoke,
+            revoked_wasted_s=self.revoked_wasted_s,
         )
 
 

@@ -1,0 +1,83 @@
+"""Docs health gate (also run as the CI ``docs`` job).
+
+Two checks keep ``docs/`` from rotting:
+
+  * every intra-repo markdown link in ``docs/*.md``, ``ROADMAP.md`` and
+    ``CHANGES.md`` resolves to an existing file;
+  * every dotted ``repro.*`` code path named in ``docs/criteria.md`` (the
+    paper-equation -> function map) actually imports — renaming a function
+    without updating the map fails here, not in a reader's shell.
+"""
+import importlib
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(REPO, "docs")
+
+_DOC_FILES = sorted(
+    os.path.join(DOCS, f) for f in os.listdir(DOCS) if f.endswith(".md")
+) + [os.path.join(REPO, "ROADMAP.md"), os.path.join(REPO, "CHANGES.md")]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODEPATH = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+
+def test_docs_pages_exist():
+    """The documented site surface: the four core pages."""
+    for page in ("architecture.md", "criteria.md", "benchmarks.md",
+                 "quickstart.md"):
+        assert os.path.isfile(os.path.join(DOCS, page)), page
+
+
+@pytest.mark.parametrize("path", _DOC_FILES, ids=os.path.basename)
+def test_intra_repo_links_resolve(path):
+    with open(path) as f:
+        text = f.read()
+    broken = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            broken.append(target)
+    assert not broken, f"{os.path.basename(path)}: broken links {broken}"
+
+
+def _resolve(dotted: str):
+    """Import the longest module prefix of a dotted path, then walk the
+    remaining attributes."""
+    parts = dotted.split(".")
+    mod, idx = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            idx = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        raise ImportError(dotted)
+    obj = mod
+    for attr in parts[idx:]:
+        obj = getattr(obj, attr)
+    return obj
+
+
+def test_criteria_doc_code_paths_import():
+    """Smoke-import every code path named in docs/criteria.md."""
+    with open(os.path.join(DOCS, "criteria.md")) as f:
+        paths = sorted(set(_CODEPATH.findall(f.read())))
+    assert paths, "docs/criteria.md names no repro.* code paths?"
+    missing = []
+    for dotted in paths:
+        try:
+            _resolve(dotted)
+        except (ImportError, AttributeError) as e:
+            missing.append(f"{dotted} ({e})")
+    assert not missing, f"stale code paths in docs/criteria.md: {missing}"
