@@ -58,6 +58,18 @@ AUTO_KERNEL_MIN_CELLS = {"cpu": 1 << 19, "default": 1 << 13}
 #: below the smallest per-backend threshold the resolver's answer is
 #: "numpy" on every backend, so it never needs to import jax to know it
 AUTO_KERNEL_FLOOR_CELLS = min(AUTO_KERNEL_MIN_CELLS.values())
+#: Floors for the PARTITIONED fused dispatches under ``use_kernel="auto"``:
+#: a requested shard count / device-mesh size is honored only at or above
+#: these epoch-cell sizes and silently collapses to the plain fused path
+#: below them.  Both partitionings pay a fixed per-grant toll — the sharded
+#: select a two-pass tile reduce, the mesh a cross-device collective
+#: rendezvous — that the measured crossovers (BENCH_allocator.json) only
+#: amortize near fleet scale: sharded selects lose below the ~2000x1000
+#: point (1.14x at it) and the mesh's per-grant collectives dwarf the
+#: O(N + J/devices) body at toy sizes while winning 1.5x+ at the fleet
+#: point.  Explicit ``shards=``/``devices=`` requests are never clamped.
+AUTO_SHARD_MIN_CELLS = 1 << 20
+AUTO_MESH_MIN_CELLS = 1 << 20
 
 # lazily-bound kernel backend modules: importing them pulls in jax, which the
 # numpy path must never pay for (and the per-grant hot loop must not re-pay

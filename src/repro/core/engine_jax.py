@@ -127,6 +127,9 @@ _IBIG = np.int32(2**31 - 1)
 #: incremented every time the epoch loop is (re)traced — the no-recompilation
 #: regression test asserts this stays flat across same-bucket epochs.
 TRACE_COUNT = 0
+#: incremented every time the MESH epoch loop is (re)traced — at most one
+#: trace per (shape bucket, mesh size, static config), regression-pinned.
+MESH_TRACE_COUNT = 0
 #: incremented once per device dispatch by :func:`run_epoch` — the
 #: one-dispatch-per-epoch acceptance test reads this.
 DISPATCH_COUNT = 0
@@ -281,6 +284,20 @@ def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
     if use_limit:
         feas0 = feas0 & (used < limit)[None, :]
 
+    if use_pallas == "persistent":
+        # whole-epoch persistent kernel: the engine computes the f32 score
+        # / feasibility init above (bit-identical to this loop's), the
+        # kernel owns everything after it.
+        from repro.kernels.epoch_persistent.ops import persistent_epoch
+
+        aux = (unit if kind == "drf"
+               else denom if kind == "tsf" else jnp.zeros((N,), f32))
+        return persistent_epoch(
+            X, tot, FREE, cap0, dom0, s0, feas0, used, D, TD, C, phi,
+            wanted, allowed, perms, aux, pidx0, pos0, j_real, limit, eps,
+            kind=kind, policy=policy, lookahead=lookahead,
+            use_limit=use_limit, max_steps=max_steps, interpret=interpret)
+
     if use_pallas:
         from repro.kernels.psdsf_score.kernel import (
             masked_argmin1d_tiles, masked_argmin2d_tiles)
@@ -410,8 +427,369 @@ def epoch_loop(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
             fin.pidx, fin.pos)
 
 
+class _MeshState(NamedTuple):
+    """Per-device block state of the mesh epoch (under ``shard_map``)."""
+    X: jax.Array        # (N, Js) f32 local allocation block
+    tot: jax.Array      # (N,) f32 replicated
+    FREE: jax.Array     # (Js, R) f32 local
+    cap: jax.Array      # (Js, R) f32 local residuals (rpsdsf) or zeros
+    dom: jax.Array      # (N, Js) f32 local dominant shares or zeros
+    s: jax.Array        # (N,) replicated or (N, Js) local criterion scores
+    feas: jax.Array     # (N, Js) bool local
+    used: jax.Array     # (Js,) i32 local
+    fcnt: jax.Array     # (N,) i32 feasible-per-row counts of THIS block
+    ccnt: jax.Array     # (Js,) i32 feasible-per-column counts
+    rmin: jax.Array     # (N,) f32 per-row masked block minima (pooled 2-D)
+    rarg: jax.Array     # (N,) i32 per-row argmin column, local (pooled 2-D)
+    pidx: jax.Array     # () i32 RRR permutation cursor (replicated)
+    pos: jax.Array      # () i32 RRR position within the round (replicated)
+    count: jax.Array    # () i32 grants so far (replicated)
+    alive: jax.Array    # () bool last select found a grant (replicated)
+    ns: jax.Array       # (max_steps,) i32 grant sequence (replicated)
+    js: jax.Array       # (max_steps,) i32
+
+
+def epoch_loop_mesh(X, D, TD, C, FREE, phi, wanted, allowed, perms, used,
+                    pidx0, pos0, j_real, limit, eps, *, kind: str,
+                    policy: str, lookahead: bool, use_limit: bool,
+                    max_steps: int, devices: int):
+    """Multi-device fused epoch: the server (agent) axis sharded over a 1-D
+    ``"agents"`` mesh of ``devices`` devices via ``shard_map``.  Same
+    contract as :func:`epoch_loop` (padded inputs, identical grant
+    sequences), minus ``use_pallas``/``shards`` — each device IS one shard.
+
+    Each device keeps its ``(N, J/devices)`` score / feasibility / residual
+    block resident for the whole epoch; per grant iteration only scalar and
+    (N,)-sized partials cross the interconnect (``lax.pmin`` of per-block
+    minima and first-within-tolerance keys, ``lax.psum`` of feasibility
+    counts and the winner's score column).  The two-pass tolerance
+    reduction applies exactly the same f32 comparisons as
+    :func:`_argmin_tie_low` — f32 min is associative, the global threshold
+    is computed from the global min, and per-block first-qualifying keys
+    reduce by the global flat key — so grant sequences are bit-for-bit the
+    single-device sequences (parity-gated).
+
+    On top of the placement, each block maintains its select partials
+    INCREMENTALLY as per-row masked minima (``rmin``/``rarg``): epoch
+    score/feasibility updates are increase-only (totals and used only
+    grow, residual FREE only shrinks, so masked scores never decrease),
+    which means a grant at (n, j) can only invalidate cached row n (every
+    shard re-scans that one row, O(J/devices)) and — on the owning shard —
+    rows whose cached minimum sat in column j AND strictly increased; only
+    then does the owner re-scan its block (``lax.cond``).  The value test
+    matters: on the cold-start zero-score plateau the granted column's
+    entries keep their tied value, so no shard re-scans at all.  The
+    global select is then one ``pmin`` over the (N,) row minima plus one
+    scalar first-qualifying-column reduce — two collectives per grant, and
+    per-grant compute drops from two full matrix passes to O(N +
+    J/devices), which is what makes the mesh path faster than the
+    single-device sharded select even without hardware parallelism.  The
+    same bookkeeping replaces the full-matrix ``any(feas)`` loop guard
+    (the select's own found flag drives liveness; the final probe
+    iteration is a no-op by predication) and RRR's per-server feasibility
+    scan with running counts.
+    """
+    global MESH_TRACE_COUNT
+    MESH_TRACE_COUNT += 1
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    from repro.launch.mesh import make_agent_mesh
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    X = X.astype(f32)
+    D = D.astype(f32)
+    TD = TD.astype(f32)
+    C = C.astype(f32)
+    FREE = FREE.astype(f32)
+    phi = phi.astype(f32)
+    wanted = wanted.astype(f32)
+    N, J = X.shape
+    R = C.shape[1]
+    K = int(devices)
+    if J % K:
+        raise ValueError(f"padded J={J} not divisible by mesh size {K}")
+    Js = J // K
+    la = f32(1.0 if lookahead else 0.0)
+    tot = jnp.sum(X, axis=1)
+    server_specific = kind in ("psdsf", "rpsdsf")
+
+    # -- global f32 score init: IDENTICAL reduction order to epoch_loop ----
+    # (J-axis reductions like the DRF capacity total or the TSF monopoly
+    # sum must NOT be computed per-shard + psum'd — that would reorder the
+    # f32 sums; they are computed on the global arrays here and enter the
+    # mesh replicated / pre-sharded.)
+    if kind == "drf":
+        aux = criteria.drf_dominant(D, C, xp=jnp)             # (N,)
+        s0 = (tot + la) * aux / phi
+    elif kind == "tsf":
+        monopoly = criteria.tsf_monopoly(D, C, allowed=allowed, xp=jnp)
+        aux = phi * jnp.maximum(monopoly, 1e-30)              # (N,)
+        s0 = (tot + la) / aux
+    elif kind == "psdsf":
+        aux = jnp.zeros((N,), f32)
+        dom0 = criteria.virtual_dominant(D, C, xp=jnp)        # (N, J)
+        s0 = ((tot + la) / phi)[:, None] * dom0
+    elif kind == "rpsdsf":
+        aux = jnp.zeros((N,), f32)
+        cap0 = criteria.residual_capacities(X, D, C, xp=jnp)  # (J, R)
+        dom0 = criteria.virtual_dominant(D, cap0, xp=jnp)     # (N, J)
+        s0 = ((tot + la) / phi)[:, None] * dom0
+    else:
+        raise ValueError(f"unsupported criterion kind {kind!r}")
+    if kind != "rpsdsf":
+        cap0 = jnp.zeros((J, R), f32)
+    if not server_specific:
+        dom0 = jnp.zeros((N, J), f32)
+
+    feas0 = criteria.feasible_mask(TD, FREE, allowed, tot < wanted,
+                                   eps=eps, xp=jnp)
+    if use_limit:
+        feas0 = feas0 & (used < limit)[None, :]
+
+    rtol, atol = f32(1e-6), f32(1e-9)
+    arangeN = jnp.arange(N, dtype=i32)
+    arangeJs = jnp.arange(Js, dtype=i32)
+    arangeJ = jnp.arange(J, dtype=i32)
+
+    def shard_body(Xl, FREEl, capl, doml, sl, feasl, allowedl, Cl, usedl,
+                   D, TD, phi, wanted, perms, tot, aux, pidx0, pos0,
+                   j_real, limit, eps):
+        ax = jax.lax.axis_index("agents").astype(i32)
+        offs = ax * Js
+
+        def gmin(x):
+            return jax.lax.pmin(x, "agents")
+
+        def gsum(x):
+            return jax.lax.psum(x, "agents")
+
+        def gany(x):
+            return jax.lax.pmax(x.astype(i32), "agents") > 0
+
+        def _row_scan(s, feas):
+            """Exact per-row masked block minima + one attaining column."""
+            masked = jnp.where(feas, s, _BIG)
+            return (jnp.min(masked, axis=1),
+                    jnp.argmin(masked, axis=1).astype(i32))
+
+        def _select(st: _MeshState):
+            if policy == "pooled" and server_specific:
+                # (N,) elementwise pmin of exact per-block row minima IS
+                # the global per-row minimum (f32 min is associative), so
+                # the global threshold and the first-qualifying row match
+                # _argmin_tie_low on the full matrix bit-for-bit; a row
+                # holds a qualifying entry iff its row min qualifies.
+                grmin = gmin(st.rmin)
+                m = jnp.min(grmin)
+                found = m < f32(_BIG)
+                tol = atol + rtol * jnp.abs(m)
+                n = jnp.min(jnp.where(grmin <= m + tol, arangeN, _IBIG))
+                n = jnp.clip(n, 0, N - 1)
+                row = jnp.where(st.feas[n], st.s[n], _BIG)     # (Js,)
+                j = gmin(jnp.min(jnp.where(row <= m + tol,
+                                           offs + arangeJs, _IBIG)))
+                return n, j, st.pidx, st.pos, found
+            if policy == "pooled":
+                row_ok = gsum(st.fcnt) > 0
+                found = jnp.any(row_ok)
+                n = _argmin_tie_low(st.s, row_ok)
+                n = jnp.clip(n, 0, N - 1)
+                j = gmin(jnp.min(jnp.where(st.feas[n], offs + arangeJs,
+                                           _IBIG)))
+                return n, j, st.pidx, st.pos, found
+            # rrr: pick the round's next feasible server from running
+            # column counts, then the best framework on the owner's column
+            # (broadcast via psum — exactly one owner contributes).
+            Kp = perms.shape[0]
+            perm = perms[jnp.minimum(st.pidx, Kp - 1)]
+            rank = jax.lax.dynamic_slice(
+                jnp.zeros(J, i32).at[perm].set(arangeJ), (offs,), (Js,))
+            server_ok = st.ccnt > 0
+            ahead = server_ok & (rank >= st.pos)
+            wrap = ~gany(jnp.any(ahead))
+            perm2 = perms[jnp.minimum(st.pidx + 1, Kp - 1)]
+            rank2 = jax.lax.dynamic_slice(
+                jnp.zeros(J, i32).at[perm2].set(arangeJ), (offs,), (Js,))
+            eff_rank = jnp.where(wrap, rank2, rank)
+            eff_ok = jnp.where(wrap, server_ok, ahead)
+            # fused (rank, server) key — ranks are a permutation, so the
+            # minimal key carries both the round's next rank and its server
+            # in ONE scalar reduce.
+            key = gmin(jnp.min(jnp.where(eff_ok,
+                                         eff_rank * J + offs + arangeJs,
+                                         _IBIG)))
+            found = key < _IBIG
+            mrank = key // J
+            j = key % J
+            ow = (j // Js) == ax
+            jl = jnp.clip(j - offs, 0, Js - 1)
+            fcolf = jnp.where(ow, st.feas[:, jl], False).astype(f32)
+            if server_specific:
+                colv = jnp.where(ow, st.s[:, jl], f32(0.0))
+                pay = gsum(jnp.stack([colv, fcolf]))           # (2, N)
+                col, fcol = pay[0], pay[1] > 0.5
+            else:
+                col = st.s
+                fcol = gsum(fcolf) > 0.5
+            n = _argmin_tie_low(col, fcol)
+            n = jnp.clip(n, 0, N - 1)
+            last = mrank == j_real - 1
+            pidx = st.pidx + wrap.astype(i32) + last.astype(i32)
+            pos = jnp.where(last, 0, mrank + 1)
+            return n, j, pidx, pos, found
+
+        def body(st: _MeshState):
+            n, j, pidx, pos, found = _select(st)
+            fnd = jnp.where(found, f32(1.0), f32(0.0))
+            ow = ((j // Js) == ax) & found
+            jl = jnp.clip(j - offs, 0, Js - 1)
+            owf = jnp.where(ow, f32(1.0), f32(0.0))
+            bundle = TD[n]                                     # (R,)
+            # owner-predicated in-place block updates (adding 0 elsewhere
+            # keeps non-owner buffers bit-identical: the state arrays are
+            # all >= +0.0 so x + 0.0 == x exactly); the found=False probe
+            # iteration that discovers exhaustion changes nothing.
+            Xl2 = st.X.at[n, jl].add(owf)
+            tot2 = st.tot.at[n].add(fnd)
+            FREEl2 = st.FREE.at[jl].add(-bundle * owf)
+            usedl2 = st.used.at[jl].add(ow.astype(i32))
+            # feasibility: owner's column j, then row n if n is satisfied
+            wants = tot2 < wanted
+            colf = wants & allowedl[:, jl] & jnp.all(
+                TD <= FREEl2[jl][None, :] + eps, axis=1)
+            if use_limit:
+                colf = colf & (usedl2[jl] < limit)
+            old_col = st.feas[:, jl]
+            new_col = jnp.where(ow, colf, old_col)
+            feas2 = st.feas.at[:, jl].set(new_col)
+            dcol = old_col.astype(i32) - new_col.astype(i32)   # removals
+            fcnt2 = st.fcnt - dcol
+            ccnt2 = st.ccnt.at[jl].add(-jnp.sum(dcol))
+            dead = found & ~wants[n]
+            old_row = feas2[n]                                 # (Js,)
+            drow = jnp.where(dead, old_row.astype(i32),
+                             jnp.zeros(Js, i32))
+            feas3 = feas2.at[n].set(jnp.where(dead,
+                                              jnp.zeros(Js, bool),
+                                              old_row))
+            fcnt3 = fcnt2.at[n].add(-jnp.sum(drow))
+            ccnt3 = ccnt2 - drow
+            # score refresh — the incremental formulas of epoch_loop, on
+            # the owner's column slice and the (replicated) granted row
+            xt_n = tot2[n] + la
+            cap2, dom2 = st.cap, st.dom
+            if kind == "drf":
+                s2 = st.s.at[n].set(jnp.where(found,
+                                              xt_n * aux[n] / phi[n],
+                                              st.s[n]))
+            elif kind == "tsf":
+                s2 = st.s.at[n].set(jnp.where(found, xt_n / aux[n],
+                                              st.s[n]))
+            elif kind == "psdsf":
+                s2 = st.s.at[n].set(jnp.where(found,
+                                              xt_n / phi[n] * doml[n],
+                                              st.s[n]))
+            else:  # rpsdsf
+                capj = Cl[jl] - Xl2[:, jl] @ D                 # (R,)
+                capj = jnp.where(ow, capj, st.cap[jl])
+                cap2 = st.cap.at[jl].set(capj)
+                domc = criteria.virtual_dominant(D, capj[None, :],
+                                                 xp=jnp)[:, 0]
+                domc = jnp.where(ow, domc, st.dom[:, jl])
+                dom2 = st.dom.at[:, jl].set(domc)
+                xt = tot2 + la
+                sc = jnp.where(ow, xt / phi * dom2[:, jl], st.s[:, jl])
+                s2 = st.s.at[:, jl].set(sc)
+                s2 = s2.at[n].set(jnp.where(found,
+                                            xt_n / phi[n] * dom2[n],
+                                            s2[n]))
+            # per-row minima cache: every shard re-scans the granted row
+            # (O(Js)); the owner re-scans its whole block ONLY when some
+            # other row cached at column jl STRICTLY increased past its row
+            # minimum — increase-only updates keep every other cached row
+            # exact, and a tied update (the cold-start zero-score plateau)
+            # invalidates nothing.
+            rmin2, rarg2 = st.rmin, st.rarg
+            if policy == "pooled" and server_specific:
+                rowm = jnp.where(feas3[n], s2[n], _BIG)
+                rmin2 = st.rmin.at[n].set(jnp.where(found, jnp.min(rowm),
+                                                    st.rmin[n]))
+                rarg2 = st.rarg.at[n].set(
+                    jnp.where(found, jnp.argmin(rowm).astype(i32),
+                              st.rarg[n]))
+                newc = jnp.where(feas3[:, jl], s2[:, jl], _BIG)
+                stale = ((st.rarg == jl) & (st.rmin < f32(_BIG))
+                         & (arangeN != n) & (newc > st.rmin))
+                rmin2, rarg2 = jax.lax.cond(
+                    ow & jnp.any(stale),
+                    lambda: _row_scan(s2, feas3),
+                    lambda: (rmin2, rarg2))
+            return _MeshState(
+                X=Xl2, tot=tot2, FREE=FREEl2, cap=cap2, dom=dom2, s=s2,
+                feas=feas3, used=usedl2, fcnt=fcnt3, ccnt=ccnt3,
+                rmin=rmin2, rarg=rarg2,
+                pidx=jnp.where(found, pidx, st.pidx),
+                pos=jnp.where(found, pos, st.pos),
+                count=st.count + found.astype(i32), alive=found,
+                ns=st.ns.at[st.count].set(
+                    jnp.where(found, n.astype(i32), st.ns[st.count])),
+                js=st.js.at[st.count].set(
+                    jnp.where(found, j.astype(i32), st.js[st.count])),
+            )
+
+        def cond(st: _MeshState):
+            return st.alive & (st.count < max_steps)
+
+        fcnt0 = jnp.sum(feasl, axis=1).astype(i32)
+        ccnt0 = jnp.sum(feasl, axis=0).astype(i32)
+        if policy == "pooled" and server_specific:
+            rmin0, rarg0 = _row_scan(sl, feasl)
+        else:
+            rmin0 = jnp.zeros((N,), f32)
+            rarg0 = jnp.zeros((N,), i32)
+        init = _MeshState(
+            X=Xl, tot=tot, FREE=FREEl, cap=capl, dom=doml, s=sl, feas=feasl,
+            used=usedl.astype(i32), fcnt=fcnt0, ccnt=ccnt0,
+            rmin=rmin0, rarg=rarg0,
+            pidx=jnp.asarray(pidx0, i32), pos=jnp.asarray(pos0, i32),
+            count=i32(0), alive=jnp.asarray(True),
+            ns=jnp.full((max_steps,), -1, i32),
+            js=jnp.full((max_steps,), -1, i32),
+        )
+        fin = jax.lax.while_loop(cond, body, init)
+        return (fin.ns, fin.js, fin.count, fin.X, fin.tot, fin.FREE,
+                fin.used, fin.pidx, fin.pos)
+
+    P = PartitionSpec
+    shard_j = P(None, "agents")      # (N, J) blocks, server axis sharded
+    shard_row = P("agents", None)    # (J, R) blocks
+    rep = P()
+    s_spec = shard_j if server_specific else rep
+    fn = shard_map(
+        shard_body, mesh=make_agent_mesh(K),
+        in_specs=(shard_j, shard_row, shard_row, shard_j, s_spec, shard_j,
+                  shard_j, shard_row, P("agents"),
+                  # D, TD, phi, wanted, perms, tot, aux, pidx0, pos0,
+                  # j_real, limit, eps — all replicated
+                  rep, rep, rep, rep, rep, rep, rep, rep, rep, rep, rep,
+                  rep),
+        out_specs=(rep, rep, rep, shard_j, rep, shard_row, P("agents"),
+                   rep, rep),
+        check_rep=False,
+    )
+    return fn(X, FREE, cap0, dom0, s0, feas0, allowed, C,
+              used.astype(jnp.int32), D, TD, phi, wanted,
+              jnp.asarray(perms), tot, aux,
+              jnp.asarray(pidx0, i32), jnp.asarray(pos0, i32),
+              jnp.asarray(j_real, i32), jnp.asarray(limit, i32),
+              jnp.asarray(eps, f32))
+
+
 _STATIC = ("kind", "policy", "lookahead", "use_limit", "use_pallas",
            "interpret", "max_steps", "shards")
+_STATIC_MESH = ("kind", "policy", "lookahead", "use_limit", "max_steps",
+                "devices")
 
 
 @functools.lru_cache(maxsize=None)
@@ -422,6 +800,13 @@ def _jitted(donate: bool):
         return jax.jit(epoch_loop, static_argnames=_STATIC,
                        donate_argnums=(0, 4, 9))
     return jax.jit(epoch_loop, static_argnames=_STATIC)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_mesh():
+    # no donation: the sharded buffers live per-device and the RRR replay
+    # path re-dispatches from kept (non-invalidated) input references.
+    return jax.jit(epoch_loop_mesh, static_argnames=_STATIC_MESH)
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -471,12 +856,15 @@ class _EpochRun:
 
     def __init__(self, *, fn, kind, policy, lookahead, use_limit, use_pallas,
                  interpret, shards, J, limit, eps, draw, consts,
-                 perms, bound, max_steps_cap, snap):
-        self.fn = fn                # _jitted(donate) — donation baked in
+                 perms, bound, max_steps_cap, snap, donate=False,
+                 devices=1):
+        self.fn = fn                # _jitted(donate) / _jitted_mesh()
         self.kind, self.policy = kind, policy
         self.lookahead, self.use_limit = lookahead, use_limit
         self.use_pallas, self.interpret = use_pallas, interpret
         self.shards = shards
+        self.devices = devices      # >1: mesh dispatch (epoch_loop_mesh)
+        self.donate = donate
         self.J, self.limit, self.eps = J, limit, eps
         self.draw = draw            # rng-stream permutation drawer (RRR)
         self.consts = consts        # (dD, dTD, dC, dphi, dwanted, dallowed)
@@ -486,8 +874,13 @@ class _EpochRun:
         self.max_steps_cap = max_steps_cap
         # host-side snapshot of the segment-start state: with donation the
         # dispatch invalidates its input buffers, so a grow-and-replay round
-        # re-uploads from here (RRR only; pooled never replays).
-        self.snap = snap
+        # re-uploads from here (RRR only; pooled never replays).  WITHOUT
+        # donation the dispatch inputs stay valid, so the replay path keeps
+        # device-array references instead and no host copy is ever made —
+        # the CPU backend (donation off) previously paid that O((N+J)*R)
+        # snapshot for a replay path that never needed it.
+        self.snap = snap if donate else None
+        self._last_inputs = None
         self.pending = None
 
     def dispatch(self, X_cur, FREE_cur, used_cur):
@@ -495,7 +888,22 @@ class _EpochRun:
         DISPATCH_COUNT += 1
         self.max_steps = _bucket(min(self.remaining, self.max_steps_cap),
                                  lo=16)
+        if self.policy == "rrr" and not self.donate:
+            # non-donated inputs survive the dispatch: keep references for
+            # grow-and-replay instead of a host snapshot.
+            self._last_inputs = (X_cur, FREE_cur, used_cur)
         dD, dTD, dC, dphi, dwanted, dallowed = self.consts
+        if self.devices > 1:
+            self.pending = self.fn(
+                X_cur, dD, dTD, dC, FREE_cur, dphi, dwanted, dallowed,
+                jnp.asarray(self.perms), used_cur,
+                np.int32(self.pidx), np.int32(self.pos),
+                jnp.int32(self.J), self.limit, jnp.float32(self.eps),
+                kind=self.kind, policy=self.policy,
+                lookahead=self.lookahead, use_limit=self.use_limit,
+                max_steps=self.max_steps, devices=self.devices,
+            )
+            return
         self.pending = self.fn(
             X_cur, dD, dTD, dC, FREE_cur, dphi, dwanted, dallowed,
             jnp.asarray(self.perms), used_cur,
@@ -517,15 +925,19 @@ class _EpochRun:
                 # past the stack (every used row index is <= the final
                 # pidx), so ending ON the last row is still exact — only
                 # pidx >= K is tainted: grow the stack (stream-append) and
-                # replay from the host snapshot (the donated inputs of the
-                # failed dispatch may already be invalidated).
+                # replay from the segment-start state (host snapshot when
+                # the failed dispatch donated its inputs; the still-valid
+                # input references otherwise).
                 while int(pidx_d) >= self.perms.shape[0]:
                     self.perms = np.concatenate(
                         [self.perms, self.draw(self.perms.shape[0])])
-                    Xs, FREEs, useds = self.snap
-                    self.dispatch(jnp.asarray(Xs, jnp.float32),
-                                  jnp.asarray(FREEs, jnp.float32),
-                                  jnp.asarray(useds, jnp.int32))
+                    if self.donate:
+                        Xs, FREEs, useds = self.snap
+                        self.dispatch(jnp.asarray(Xs, jnp.float32),
+                                      jnp.asarray(FREEs, jnp.float32),
+                                      jnp.asarray(useds, jnp.int32))
+                    else:
+                        self.dispatch(*self._last_inputs)
                     ns, js, count, Xd, _totd, FREEd, usedd, pidx_d, pos_d = \
                         self.pending
             k = int(count)
@@ -537,7 +949,7 @@ class _EpochRun:
             # (incl. the RRR cursor, so the chain equals one long epoch)
             self.remaining -= k
             self.pidx, self.pos = int(pidx_d), int(pos_d)
-            if self.policy == "rrr":
+            if self.policy == "rrr" and self.donate:
                 # snapshot BEFORE the arrays are donated into the next call
                 self.snap = (np.asarray(Xd), np.asarray(FREEd),
                              np.asarray(usedd))
@@ -575,7 +987,8 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
                     lookahead: bool = False,
                     rng: Optional[np.random.Generator] = None,
                     eps: float = 1e-9, use_pallas: bool = False,
-                    shards: int = 1, max_steps_cap: int = 16384,
+                    shards: int = 1, devices: int = 1,
+                    max_steps_cap: int = 16384,
                     _perm_rows: Optional[int] = None,
                     _donate: Optional[bool] = None) -> EpochHandle:
     """Dispatch one allocation epoch on device WITHOUT blocking on readback.
@@ -591,18 +1004,32 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
 
     ``shards > 1`` partitions the in-loop selects (see the module
     docstring); it is rounded down to a power of two dividing the padded
-    shapes.  ``use_pallas`` is strictly opt-in (exact-tie caveat in the
-    module docstring).  ``_donate`` forces buffer donation on/off (test
-    hook; default: donate on non-CPU backends — safe for RRR because
-    replay re-uploads from a host snapshot).
+    shapes.  ``devices > 1`` dispatches :func:`epoch_loop_mesh` instead —
+    the server axis sharded over that many REAL devices (rounded down to a
+    power of two within the process device count; ``shards``/``use_pallas``
+    do not apply there, each device is one resident shard).  ``use_pallas``
+    is strictly opt-in (exact-tie caveat in the module docstring);
+    ``use_pallas="persistent"`` runs the whole epoch as one persistent
+    Pallas kernel instance (``repro.kernels.epoch_persistent``).
+    ``_donate`` forces buffer donation on/off (test hook; default: donate
+    on non-CPU single-device dispatches — safe for RRR because replay
+    re-uploads from a host snapshot; without donation the replay keeps
+    device-array references and skips the snapshot entirely).
     """
     crit = criteria.get_criterion(criterion)
     kind = crit.name
     if kind not in COVERED_CRITERIA or policy not in COVERED_POLICIES:
         raise ValueError(f"fused epoch does not cover {kind}/{policy}")
     interpret = jax.default_backend() == "cpu"
-    donate = (jax.default_backend() != "cpu") if _donate is None \
-        else bool(_donate)
+    devices = max(1, min(int(devices), len(jax.devices())))
+    devices = 1 << (devices.bit_length() - 1)    # floor to a power of two
+    if devices > 1:
+        shards = 1          # each mesh device IS one resident shard
+        use_pallas = False  # mesh body keeps jnp partials (see docstring)
+    if use_pallas == "persistent":
+        shards = 1          # one resident instance owns the whole epoch
+    donate = (jax.default_backend() != "cpu" and devices <= 1) \
+        if _donate is None else bool(_donate)
 
     X = np.asarray(X, np.float64)
     D = np.asarray(D, np.float64)
@@ -624,6 +1051,7 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
     shards = max(1, int(shards))
     shards = 1 << (shards.bit_length() - 1)      # floor to a power of two
     shards = min(shards, Np, Jp)                 # pow2s: divides both
+    devices = min(devices, Jp)                   # pow2s: divides Jp
 
     Xp = _pad(_pad(X, Np, 0, 0.0), Jp, 1, 0.0)
     Dp = _pad(D, Np, 0, 0.0)
@@ -662,7 +1090,7 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
     else:
         perms = np.arange(Jp, dtype=np.int32)[None, :]
 
-    fn = _jitted(donate)
+    fn = _jitted_mesh() if devices > 1 else _jitted(donate)
     f32 = jnp.float32
     # constant inputs upload once; the mutable state arrays stay on device
     # across chained segments (only the grant sequence is read back).
@@ -672,10 +1100,10 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
     run = _EpochRun(
         fn=fn, kind=kind, policy=policy, lookahead=lookahead,
         use_limit=use_limit, use_pallas=use_pallas, interpret=interpret,
-        shards=shards, J=J, limit=limit, eps=eps, draw=_draw_perms,
-        consts=consts, perms=perms, bound=bound,
-        max_steps_cap=max_steps_cap,
-        snap=(Xp, FREEp, usedp) if policy == "rrr" else None,
+        shards=shards, devices=devices, J=J, limit=limit, eps=eps,
+        draw=_draw_perms, consts=consts, perms=perms, bound=bound,
+        max_steps_cap=max_steps_cap, donate=donate,
+        snap=(Xp, FREEp, usedp) if policy == "rrr" and donate else None,
     )
     run.dispatch(jnp.asarray(Xp, f32), jnp.asarray(FREEp, f32),
                  jnp.asarray(usedp))

@@ -72,7 +72,7 @@ def _masked_argmin(scores, mask, key, random_tie: bool):
 
 @functools.partial(
     jax.jit, static_argnames=("criterion", "policy", "lookahead", "tie",
-                              "max_steps", "shards")
+                              "max_steps", "shards", "devices")
 )
 def progressive_fill_jax(
     D: jax.Array,            # (N, R) demands
@@ -86,14 +86,18 @@ def progressive_fill_jax(
     tie: str = "low",
     max_steps: int = 4096,
     shards: int = 1,         # shard the delegated epoch-loop selects
+    devices: int = 1,        # shard the delegated epoch over a device mesh
     x0: jax.Array | None = None,
     allowed: jax.Array | None = None,   # (N, J) bool placement constraints
 ) -> jax.Array:
     """Run progressive filling; returns the (N, J) int32 allocation.
 
     ``shards > 1`` partitions the deterministic pooled path's in-loop
-    selects across agent shards (parity-gated — see the engine_jax module
-    docstring); the legacy RRR/bestfit/random-tie bodies ignore it."""
+    selects across agent shards; ``devices > 1`` delegates to the
+    device-mesh epoch (``engine_jax.epoch_loop_mesh`` — J must divide by
+    the mesh size) instead.  Both are parity-gated (see the engine_jax
+    module docstring); the legacy RRR/bestfit/random-tie bodies ignore
+    them."""
     crit = criteria.get_criterion(criterion)
     pol = _POL[policy]
     random_tie = tie == "random"
@@ -120,16 +124,24 @@ def progressive_fill_jax(
         FREE = criteria.residual_capacities(Xf, D, C, xp=jnp)
         perms = jnp.arange(J, dtype=jnp.int32)[None, :]
         allowed_m = (jnp.ones((N, J), bool) if allowed is None else allowed)
-        _ns, _js, _cnt, x_fin, *_rest = engine_jax.epoch_loop(
+        loop_args = (
             Xf, D, D, C, FREE, phi,
             jnp.full((N,), 3.0e38, jnp.float32),      # no wanted caps
             allowed_m, perms, jnp.zeros(J, jnp.int32),
             jnp.int32(0), jnp.int32(0),
-            jnp.int32(J), jnp.int32(0), jnp.float32(1e-6),
-            kind=crit.name, policy=policy, lookahead=lookahead,
-            use_limit=False, use_pallas=False, interpret=False,
-            max_steps=max_steps, shards=shards,
-        )
+            jnp.int32(J), jnp.int32(0), jnp.float32(1e-6))
+        if devices > 1:
+            _ns, _js, _cnt, x_fin, *_rest = engine_jax.epoch_loop_mesh(
+                *loop_args, kind=crit.name, policy=policy,
+                lookahead=lookahead, use_limit=False, max_steps=max_steps,
+                devices=devices,
+            )
+        else:
+            _ns, _js, _cnt, x_fin, *_rest = engine_jax.epoch_loop(
+                *loop_args, kind=crit.name, policy=policy,
+                lookahead=lookahead, use_limit=False, use_pallas=False,
+                interpret=False, max_steps=max_steps, shards=shards,
+            )
         return x_fin.astype(jnp.int32)
 
     key, pk = jax.random.split(key)

@@ -79,6 +79,8 @@ from repro.core.cluster_state import ClusterState, StateView
 from repro.core.engine import (
     AUTO_KERNEL_FLOOR_CELLS,
     AUTO_KERNEL_MIN_CELLS,
+    AUTO_MESH_MIN_CELLS,
+    AUTO_SHARD_MIN_CELLS,
     BatchedEpoch,
 )
 
@@ -432,7 +434,7 @@ class OnlineAllocator:
 
     def allocate_batched(self, per_agent_limit: Optional[int] = None,
                          tie: str = "low", use_kernel="auto",
-                         shards: int = 1) -> list[Grant]:
+                         shards: int = 1, devices: int = 1) -> list[Grant]:
         """Batched epoch: score once, grant many (see module docstring).
 
         ``use_kernel`` selects the backend:
@@ -461,13 +463,19 @@ class OnlineAllocator:
           * ``False`` — pure numpy incremental epoch.
 
         ``shards > 1`` partitions the fused epoch's in-loop selects across
-        agent shards (parity-gated; see the engine_jax module docstring).
+        agent shards; ``devices > 1`` shards the epoch state itself over a
+        device mesh (``engine_jax.epoch_loop_mesh`` — each device keeps its
+        agent-block resident, only reduce partials cross the interconnect).
+        Both are parity-gated (see the engine_jax module docstring), and
+        under ``"auto"`` both collapse to the plain fused dispatch below
+        their measured floors (:meth:`_resolve_partition`).
 
         Implemented as ``commit_epoch(begin_epoch(...))`` — the synchronous
         path and the asynchronous pipeline are the same code.
         """
         return self.commit_epoch(self.begin_epoch(
-            per_agent_limit, tie=tie, use_kernel=use_kernel, shards=shards))
+            per_agent_limit, tie=tie, use_kernel=use_kernel, shards=shards,
+            devices=devices))
 
     # -- the asynchronous epoch pipeline -------------------------------------
 
@@ -506,9 +514,29 @@ class OnlineAllocator:
             return "fused" if N * J >= min_cells else False
         raise ValueError(f"unknown use_kernel spec {use_kernel!r}")
 
+    def _resolve_partition(self, use_kernel, N: int, J: int, shards: int,
+                           devices: int):
+        """Clamp a requested fused-epoch partitioning under ``"auto"``.
+
+        Sharded selects and device-mesh epochs each pay a fixed per-grant
+        toll that only amortizes near fleet scale, so the auto rule honors
+        ``shards``/``devices`` requests only at or above their measured
+        floors (:data:`repro.core.engine.AUTO_SHARD_MIN_CELLS` /
+        :data:`~repro.core.engine.AUTO_MESH_MIN_CELLS`) and collapses them
+        to the plain fused dispatch below.  Explicit ``use_kernel`` specs
+        are a stated choice and pass through untouched."""
+        if use_kernel != "auto":
+            return shards, devices
+        cells = N * J
+        if shards > 1 and cells < AUTO_SHARD_MIN_CELLS:
+            shards = 1
+        if devices > 1 and cells < AUTO_MESH_MIN_CELLS:
+            devices = 1
+        return shards, devices
+
     def begin_epoch(self, per_agent_limit: Optional[int] = None,
                     tie: str = "low", use_kernel="auto",
-                    shards: int = 1) -> InFlightEpoch:
+                    shards: int = 1, devices: int = 1) -> InFlightEpoch:
         """Stage one epoch and dispatch it without blocking on the result.
 
         Freezes the epoch inputs (X/D/C/FREE/phi/allowed/wanted + the true
@@ -552,12 +580,15 @@ class OnlineAllocator:
         if kernel == "fused":
             from repro.core import engine_jax
 
+            shards, devices = self._resolve_partition(
+                use_kernel, N, len(view.agents), shards, devices)
             handle = engine_jax.run_epoch_async(
                 self.crit, self.server_policy,
                 X=view.X, D=view.D, C=view.C, FREE=view.FREE,
                 phi=view.phi, allowed=view.allowed, wanted=view.wanted,
                 true_demands=TD, per_agent_limit=per_agent_limit,
                 lookahead=False, rng=self.rng, shards=shards,
+                devices=devices,
             )
             epoch = InFlightEpoch(view=view, TD=TD,
                                   per_agent_limit=per_agent_limit,

@@ -1,0 +1,10 @@
+"""Persistent allocation-epoch Pallas kernel.
+
+The whole select -> grant-apply -> incremental-refresh loop of one
+allocation epoch as ONE long-lived kernel instance: the epoch state
+(allocation block, residual FREE, criterion scores, feasibility mask)
+stays resident in VMEM across every grant iteration instead of being
+re-streamed from HBM per select.  See :mod:`.ops` for the callable wrapper
+and :mod:`.kernel` for the kernel body.
+"""
+from repro.kernels.epoch_persistent.ops import persistent_epoch  # noqa: F401

@@ -1,0 +1,192 @@
+"""Kernel body of the persistent allocation epoch.
+
+One pallas_call instance runs the ENTIRE epoch: a ``lax.fori_loop`` over
+the grant budget whose every iteration selects the next (framework,
+server) pair, applies the grant and restores score / feasibility
+consistency — the same formulas :func:`repro.core.engine_jax.epoch_loop`
+traces, but operating on VMEM-resident refs.  The mutable state arrays
+enter through ``input_output_aliases`` so the kernel updates them in
+place; the grant sequence and the final RRR cursor are the only dedicated
+outputs.
+
+Differences from the XLA while-loop path, by construction:
+
+* the loop is a ``fori_loop`` over the (static) grant budget with an
+  ``alive`` predicate, not a ``while_loop`` — Pallas kernels need static
+  trip counts; dead iterations write nothing (all stores are
+  ``where``-predicated on ``alive``);
+* the RRR permutation->rank inversion uses a dense one-hot reduction
+  instead of a scatter (Pallas has no scatter primitive);
+* feasibility and placement masks travel as int32 (TPU Pallas has no
+  1-bit vectors).
+
+Tie-break semantics are exactly :func:`engine_jax._argmin_tie_low` — the
+global two-pass tolerance reduction, NOT the 128-wide tile split of
+``repro.kernels.psdsf_score`` — so grant sequences are bit-for-bit the
+fused-epoch sequences on every covered combo (parity-gated).
+
+On CPU the kernel runs in interpreter mode (functional correctness; the
+VMEM-residency story needs a real accelerator).  Under a device mesh the
+TPU form would run one instance per shard with the cross-shard (min,
+argmin) reduce as remote DMA; that composition is not wired up on the CPU
+backend — ``epoch_loop_mesh`` covers multi-device placement there.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BIG = 3.0e38
+_IBIG = np.int32(2**31 - 1)
+
+
+def _argmin_tie_low(s, mask, rtol=1e-6, atol=1e-9):
+    """First index among near-minimal masked entries (numpy tie="low") —
+    the same two-pass tolerance reduction as the engine's."""
+    masked = jnp.where(mask, s.astype(jnp.float32), _BIG)
+    m = jnp.min(masked)
+    tol = atol + rtol * jnp.abs(m)
+    idx = jnp.arange(masked.shape[0], dtype=jnp.int32)
+    return jnp.min(jnp.where(masked <= m + tol, idx, _IBIG))
+
+
+def epoch_kernel(D_ref, TD_ref, C_ref, phi_ref, wanted_ref, allowed_ref,
+                 perms_ref, aux_ref, iscal_ref, eps_ref,
+                 X_ref, tot_ref, FREE_ref, cap_ref, dom_ref, s_ref,
+                 feas_ref, used_ref, ns_ref, js_ref, cnt_ref,
+                 *, kind: str, policy: str, lookahead: bool,
+                 use_limit: bool, max_steps: int):
+    """Pallas kernel: one whole allocation epoch, state resident in VMEM.
+
+    ``X/tot/FREE/cap/dom/s/feas/used`` are aliased in/out refs (mutated in
+    place).  ``iscal`` = (pidx0, pos0, j_real, limit) i32; ``aux`` is the
+    criterion's X-independent (N,) piece (DRF unit / TSF denom; zeros for
+    the PS-DSF family).  ``cnt`` returns (count, pidx, pos)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    N, J = X_ref.shape
+    la = f32(1.0 if lookahead else 0.0)
+    server_specific = kind in ("psdsf", "rpsdsf")
+    arangeN = jnp.arange(N, dtype=i32)
+    arangeJ = jnp.arange(J, dtype=i32)
+
+    D = D_ref[...]
+    TD = TD_ref[...]
+    C = C_ref[...]
+    phi = phi_ref[...]
+    wanted = wanted_ref[...]
+    allowed = allowed_ref[...] != 0               # (N, J) i32 -> bool
+    perms = perms_ref[...]
+    aux = aux_ref[...]
+    eps = eps_ref[0]
+    pidx0, pos0 = iscal_ref[0], iscal_ref[1]
+    j_real, limit = iscal_ref[2], iscal_ref[3]
+
+    ns_ref[...] = jnp.full((max_steps,), -1, i32)
+    js_ref[...] = jnp.full((max_steps,), -1, i32)
+
+    def _rank_of(pidx):
+        """rank[j] = position of server j in permutation row ``pidx`` —
+        dense one-hot contraction (no scatter in Pallas)."""
+        K = perms.shape[0]
+        perm = perms[jnp.minimum(pidx, K - 1)]
+        hot = perm[:, None] == arangeJ[None, :]   # (J, J)
+        return jnp.sum(jnp.where(hot, arangeJ[:, None], 0),
+                       axis=0).astype(i32)
+
+    def _select(s, feas, pidx, pos):
+        if policy == "pooled":
+            if server_specific:
+                flat = _argmin_tie_low(s.reshape(-1), feas.reshape(-1))
+                return flat // J, flat % J, pidx, pos
+            row_ok = jnp.any(feas, axis=1)
+            n = _argmin_tie_low(s, row_ok)
+            j = jnp.min(jnp.where(feas[n], arangeJ, _IBIG))
+            return n, j, pidx, pos
+        rank = _rank_of(pidx)
+        server_ok = jnp.any(feas, axis=0)
+        ahead = server_ok & (rank >= pos)
+        wrap = ~jnp.any(ahead)
+        rank2 = _rank_of(pidx + 1)
+        eff_rank = jnp.where(wrap, rank2, rank)
+        eff_ok = jnp.where(wrap, server_ok, ahead)
+        j = jnp.argmin(jnp.where(eff_ok, eff_rank, _IBIG)).astype(i32)
+        col = s[:, j] if server_specific else s
+        n = _argmin_tie_low(col, feas[:, j])
+        krank = eff_rank[j]
+        last = krank == j_real - 1
+        pidx2 = pidx + wrap.astype(i32) + last.astype(i32)
+        pos2 = jnp.where(last, 0, krank + 1)
+        return n, j, pidx2, pos2
+
+    def step(k, carry):
+        count, pidx, pos, alive = carry
+        feas = feas_ref[...] != 0
+        s = s_ref[...]
+        X = X_ref[...]
+        tot = tot_ref[...]
+        FREE = FREE_ref[...]
+        used = used_ref[...]
+
+        n, j, pidx2, pos2 = _select(s, feas, pidx, pos)
+        bundle = TD[n]
+        X2 = X.at[n, j].add(1.0)
+        tot2 = tot.at[n].add(1.0)
+        FREE2 = FREE.at[j].add(-bundle)
+        used2 = used.at[j].add(1)
+        wants = tot2 < wanted
+        colf = wants & allowed[:, j] & jnp.all(
+            TD <= FREE2[j][None, :] + eps, axis=1)
+        if use_limit:
+            colf = colf & (used2[j] < limit)
+        feas2 = feas.at[:, j].set(colf)
+        feas2 = jnp.where((arangeN == n)[:, None] & ~wants[n], False, feas2)
+
+        xt_n = tot2[n] + la
+        if kind == "drf":
+            s2 = s.at[n].set(xt_n * aux[n] / phi[n])
+        elif kind == "tsf":
+            s2 = s.at[n].set(xt_n / aux[n])
+        elif kind == "psdsf":
+            s2 = s.at[n].set(xt_n / phi[n] * dom_ref[...][n])
+        else:  # rpsdsf: refresh server j's residual column, then row n
+            cap = cap_ref[...]
+            dom = dom_ref[...]
+            cap_j = C[j] - X2[:, j] @ D                        # (R,)
+            cap2 = cap.at[j].set(cap_j)
+            safe = jnp.where(cap_j > 1e-12, cap_j, 1e-30)[None, :]
+            frac = D / safe
+            frac = jnp.where((cap_j[None, :] <= 1e-12) & (D > 0.0),
+                             _BIG, frac)
+            dom_col = jnp.max(frac, axis=1)                   # (N,)
+            dom2 = dom.at[:, j].set(dom_col)
+            xt = tot2 + la
+            s2 = s.at[:, j].set(xt / phi * dom2[:, j])
+            s2 = s2.at[n].set(xt_n / phi[n] * dom2[n])
+            cap_ref[...] = jnp.where(alive, cap2, cap)
+            dom_ref[...] = jnp.where(alive, dom2, dom)
+
+        X_ref[...] = jnp.where(alive, X2, X)
+        tot_ref[...] = jnp.where(alive, tot2, tot)
+        FREE_ref[...] = jnp.where(alive, FREE2, FREE)
+        used_ref[...] = jnp.where(alive, used2, used)
+        feas_ref[...] = jnp.where(alive, feas2, feas).astype(i32)
+        s_ref[...] = jnp.where(alive, s2, s)
+        ns = ns_ref[...]
+        js = js_ref[...]
+        ns_ref[...] = jnp.where(alive, ns.at[count].set(n.astype(i32)), ns)
+        js_ref[...] = jnp.where(alive, js.at[count].set(j.astype(i32)), js)
+
+        count2 = count + alive.astype(i32)
+        alive2 = alive & jnp.any(feas2)
+        return (count2,
+                jnp.where(alive, pidx2, pidx),
+                jnp.where(alive, pos2, pos), alive2)
+
+    alive0 = jnp.any(feas_ref[...] != 0)
+    count, pidx, pos, _ = jax.lax.fori_loop(
+        0, max_steps, step, (i32(0), pidx0, pos0, alive0))
+    cnt_ref[0] = count
+    cnt_ref[1] = pidx
+    cnt_ref[2] = pos

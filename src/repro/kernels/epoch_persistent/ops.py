@@ -1,0 +1,92 @@
+"""pallas_call wrapper for the persistent allocation-epoch kernel.
+
+One kernel instance owns the whole epoch: the eight mutable state arrays
+are aliased input->output buffers (``input_output_aliases``), so on a real
+accelerator the epoch state is written in place and stays VMEM-resident
+across every grant iteration — nothing round-trips through HBM between a
+select and the next score refresh.  The kernel body also seeds each output
+ref from its input ref explicitly, which keeps interpreter-mode semantics
+identical to the aliased fast path.
+
+The wrapper is shape-polymorphic but instance-global (no grid): blocking
+the score matrix would break the exact global two-pass tie reduction the
+engine's parity contract requires.  That bounds the state to what fits one
+core's VMEM — the guard below refuses eagerly rather than letting the
+compiler fail opaquely; the multi-device route for larger fleets is
+``engine_jax.epoch_loop_mesh``, which shards the state ACROSS kernels
+instead of growing one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.epoch_persistent.kernel import epoch_kernel
+
+# conservative single-instance budget on a real accelerator (bytes); the
+# interpreter (CPU) path has no such ceiling.
+_VMEM_BUDGET = 96 * 1024 * 1024
+
+_N_CONST = 10   # D, TD, C, phi, wanted, allowed, perms, aux, iscal, eps
+_N_STATE = 8    # X, tot, FREE, cap, dom, s, feas, used
+
+
+def _seeded_body(*refs, kind, policy, lookahead, use_limit, max_steps):
+    ins = refs[:_N_CONST + _N_STATE]
+    outs = refs[_N_CONST + _N_STATE:]
+    # seed aliased state outputs from the inputs (no-op copy when truly
+    # aliased; the correctness anchor in interpreter mode)
+    for i_ref, o_ref in zip(ins[_N_CONST:], outs[:_N_STATE]):
+        o_ref[...] = i_ref[...]
+    epoch_kernel(*ins[:_N_CONST], *outs, kind=kind, policy=policy,
+                 lookahead=lookahead, use_limit=use_limit,
+                 max_steps=max_steps)
+
+
+def persistent_epoch(X, tot, FREE, cap, dom, s, feas, used, D, TD, C, phi,
+                     wanted, allowed, perms, aux, pidx0, pos0, j_real,
+                     limit, eps, *, kind: str, policy: str, lookahead: bool,
+                     use_limit: bool, max_steps: int, interpret: bool):
+    """Run one whole allocation epoch as a single persistent kernel.
+
+    Arguments are the engine's padded f32 epoch-state and constant arrays
+    (``aux`` is the criterion's X-independent (N,) piece; zeros for the
+    PS-DSF family, which carries ``dom``/``cap`` instead).  Returns the
+    :func:`repro.core.engine_jax.epoch_loop` tuple ``(ns, js, count, X,
+    tot, FREE, used, pidx, pos)``.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    state = [X.astype(f32), tot.astype(f32), FREE.astype(f32),
+             cap.astype(f32), dom.astype(f32), s.astype(f32),
+             jnp.asarray(feas).astype(i32), jnp.asarray(used).astype(i32)]
+    if not interpret:
+        vmem = sum(a.size * a.dtype.itemsize for a in state)
+        if vmem > _VMEM_BUDGET:
+            raise ValueError(
+                f"persistent epoch state ({vmem} bytes) exceeds the "
+                f"single-instance budget ({_VMEM_BUDGET}); shard the fleet "
+                "over a device mesh instead (devices > 1)")
+    iscal = jnp.stack([jnp.asarray(pidx0, i32), jnp.asarray(pos0, i32),
+                       jnp.asarray(j_real, i32), jnp.asarray(limit, i32)])
+    consts = [D.astype(f32), TD.astype(f32), C.astype(f32),
+              phi.astype(f32), wanted.astype(f32),
+              jnp.asarray(allowed).astype(i32), jnp.asarray(perms, i32),
+              aux.astype(f32), iscal,
+              jnp.asarray(eps, f32).reshape(1)]
+    out_shape = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in state]
+    out_shape += [jax.ShapeDtypeStruct((max_steps,), i32),
+                  jax.ShapeDtypeStruct((max_steps,), i32),
+                  jax.ShapeDtypeStruct((3,), i32)]
+    body = functools.partial(_seeded_body, kind=kind, policy=policy,
+                             lookahead=lookahead, use_limit=use_limit,
+                             max_steps=max_steps)
+    outs = pl.pallas_call(
+        body, out_shape=out_shape,
+        input_output_aliases={_N_CONST + k: k for k in range(_N_STATE)},
+        interpret=bool(interpret),
+    )(*consts, *state)
+    X2, tot2, FREE2, _cap2, _dom2, _s2, _feas2, used2, ns, js, cnt = outs
+    return ns, js, cnt[0], X2, tot2, FREE2, used2, cnt[1], cnt[2]

@@ -21,6 +21,24 @@ def make_smoke_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_agent_mesh(n: int):
+    """1-D mesh over the first ``n`` local devices, axis name ``"agents"``.
+
+    The fused allocation epoch shards the server (Mesos agent) axis over
+    this mesh (see ``repro.core.engine_jax.epoch_loop_mesh``): each device
+    owns a contiguous block of server columns and only (min, argmin)
+    partials cross the interconnect per grant iteration.  ``n`` may be
+    smaller than the process device count (the remaining devices are left
+    free for e.g. the async pipeline's other allocators)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"agent mesh wants {n} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:n]), ("agents",))
+
+
 def make_abstract_mesh(shape: tuple, axes: tuple):
     """Device-free AbstractMesh across jax API generations.
 

@@ -294,6 +294,49 @@ def test_sharded_trace_count_regression():
     assert engine_jax.TRACE_COUNT <= t0 + 1
 
 
+@pytest.mark.parametrize("pol", DEVICE_POLICIES)
+def test_sharded_wanted_exhaustion_and_limit(pol):
+    """Mid-epoch ``wanted`` exhaustion + ``per_agent_limit`` under
+    shards>1: the sharded loop stops at the reference count and never
+    exceeds the per-agent cap."""
+    pytest.importorskip("jax")
+    from repro.core import engine_jax
+
+    rng = np.random.default_rng(5)
+    N, J, R = 7, 6, 2
+    D = rng.uniform(0.5, 1.5, (N, R))
+    C = rng.uniform(6.0, 12.0, (J, R))
+    kw = dict(X=np.zeros((N, J)), D=D, C=C, FREE=C.copy(),
+              phi=rng.uniform(0.5, 2.0, N),
+              wanted=rng.integers(1, 3, N).astype(float),  # exhausts early
+              allowed=rng.random((N, J)) > 0.2, true_demands=D,
+              per_agent_limit=2)
+    ref = engine_jax.run_epoch("rpsdsf", pol,
+                               rng=np.random.default_rng(1), **kw)
+    got = engine_jax.run_epoch("rpsdsf", pol,
+                               rng=np.random.default_rng(1), shards=2, **kw)
+    assert ref == got
+    assert 0 < len(ref) < int(kw["wanted"].sum()) + 1
+    counts = np.bincount([j for _n, j in ref])
+    assert counts.max() <= 2
+
+
+def test_auto_partition_floors_clamp_small_epochs():
+    """use_kernel='auto' collapses shards/devices requests below the
+    measured floors to the plain fused dispatch; explicit specs pass
+    through untouched."""
+    from repro.core.engine import AUTO_MESH_MIN_CELLS, AUTO_SHARD_MIN_CELLS
+
+    al = OnlineAllocator(2, criterion="drf", server_policy="pooled", seed=0)
+    assert al._resolve_partition("auto", 50, 25, 8, 8) == (1, 1)
+    big_n = AUTO_SHARD_MIN_CELLS // 1024 + 1
+    assert al._resolve_partition("auto", big_n, 1024, 8, 1) == (8, 1)
+    big_n = AUTO_MESH_MIN_CELLS // 1024 + 1
+    assert al._resolve_partition("auto", big_n, 1024, 1, 8) == (1, 8)
+    assert al._resolve_partition("fused", 50, 25, 8, 8) == (8, 8)
+    assert al._resolve_partition(True, 50, 25, 4, 2) == (4, 2)
+
+
 def test_progressive_fill_jax_sharded_parity():
     """The delegated filling_jax pooled path accepts shards and keeps its
     allocation unchanged."""
