@@ -79,6 +79,7 @@ class ClusterState:
         self._fw_allowed_names: dict[int, Optional[frozenset]] = {}
         self._version = 0          # bumped on membership change
         self._view_cache = None    # (version, f_slots, a_slots, fids, agents)
+        self._epoch_view_cache = None   # (mutation_count, frozen StateView)
         #: ticks on every mutation (membership AND grant/release/set_*) —
         #: the in-flight-epoch staleness guard (see module docstring).
         self.mutation_count = 0
@@ -235,16 +236,31 @@ class ClusterState:
         self.FREE[j] += bundle
         self.mutation_count += 1
 
+    # the set_* updates skip the mutation tick when the value is unchanged:
+    # the simulator re-asserts wanted/demand every cycle, and a no-op tick
+    # would needlessly invalidate the memoized epoch_view (and trip the
+    # in-flight staleness guard) for a state that did not change.
+
     def set_demand(self, fid: str, demand) -> None:
-        self.D[self.fid2slot[fid]] = 0.0 if demand is None else demand
+        n = self.fid2slot[fid]
+        d = 0.0 if demand is None else demand
+        if np.all(self.D[n] == d):
+            return
+        self.D[n] = d
         self.mutation_count += 1
 
     def set_weight(self, fid: str, phi: float) -> None:
-        self.phi[self.fid2slot[fid]] = float(phi)
+        n = self.fid2slot[fid]
+        if self.phi[n] == float(phi):
+            return
+        self.phi[n] = float(phi)
         self.mutation_count += 1
 
     def set_wanted(self, fid: str, wanted: float) -> None:
-        self.wanted[self.fid2slot[fid]] = float(wanted)
+        n = self.fid2slot[fid]
+        if self.wanted[n] == float(wanted):
+            return
+        self.wanted[n] = float(wanted)
         self.mutation_count += 1
 
     # -- views ----------------------------------------------------------------
@@ -286,9 +302,18 @@ class ClusterState:
         allocation epoch reads from.  The arrays are the same gathered
         copies sorted_view hands out, additionally marked read-only so a
         concurrent writer trips immediately instead of corrupting an epoch
-        that already uploaded them."""
+        that already uploaded them.
+
+        Memoized on ``mutation_count``: back-to-back epochs with no
+        intervening mutation get the SAME frozen snapshot back instead of
+        re-gathering (and re-uploading) an identical one — safe precisely
+        because the arrays are immutable."""
+        cache = self._epoch_view_cache
+        if cache is not None and cache[0] == self.mutation_count:
+            return cache[1]
         view = self.sorted_view()
         for arr in (view.X, view.D, view.C, view.FREE, view.phi,
                     view.allowed, view.wanted, view.Xr):
             arr.setflags(write=False)
+        self._epoch_view_cache = (self.mutation_count, view)
         return view

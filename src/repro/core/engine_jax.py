@@ -849,6 +849,18 @@ def grant_bound(TD, FREE, tot, wanted, per_agent_limit=None) -> int:
     return max(bound, 1)
 
 
+def rrr_perm_budget(bound: int, J: int, max_steps_cap: int = 16384) -> int:
+    """Initial RRR permutation-stack height for one dispatch segment.
+
+    One permutation per round of ~J grants plus wrap slack, pow2-bucketed
+    (stack shape is part of the jit key).  A pure function of the epoch
+    profile — the epoch-cache layer calls this to pre-draw (and
+    fingerprint) the exact prefix the dispatch would draw, keeping the rng
+    stream position identical with and without a cache in front."""
+    seg = min(bound, max_steps_cap)
+    return _bucket(4 + 4 * ((seg + J - 1) // J))
+
+
 class _EpochRun:
     """Continuation state of an in-flight fused epoch (one dispatch issued,
     readback deferred).  ``_finish`` drives RRR grow-and-replay rounds and
@@ -963,11 +975,15 @@ class EpochHandle:
     finish, drives any chained/replayed dispatches, and returns the flat
     grant sequence.  Idempotent — repeated calls return the same list."""
 
-    __slots__ = ("_seq", "_run")
+    __slots__ = ("_seq", "_run", "perms")
 
     def __init__(self, seq=None, run=None):
         self._seq = seq
         self._run = run
+        # final permutation stack (set at result(); None for empty epochs).
+        # The epoch-cache layer reads it to record how many grow-and-replay
+        # rows an RRR epoch drew PAST the pre-drawn prefix.
+        self.perms = None
 
     @property
     def in_flight(self) -> bool:
@@ -977,6 +993,7 @@ class EpochHandle:
     def result(self) -> list[tuple[int, int]]:
         if self._seq is None:
             self._seq = self._run._finish()
+            self.perms = self._run.perms
             self._run = None
         return self._seq
 
@@ -989,6 +1006,7 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
                     eps: float = 1e-9, use_pallas: bool = False,
                     shards: int = 1, devices: int = 1,
                     max_steps_cap: int = 16384,
+                    preperms: Optional[np.ndarray] = None,
                     _perm_rows: Optional[int] = None,
                     _donate: Optional[bool] = None) -> EpochHandle:
     """Dispatch one allocation epoch on device WITHOUT blocking on readback.
@@ -1015,6 +1033,11 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
     on non-CPU single-device dispatches — safe for RRR because replay
     re-uploads from a host snapshot; without donation the replay keeps
     device-array references and skips the snapshot entirely).
+    ``preperms`` supplies the RRR permutation prefix as a ``(k, J)`` int32
+    array already drawn from the stream (the epoch-cache layer pre-draws
+    :func:`rrr_perm_budget` rows so it can fingerprint them); the dispatch
+    then draws nothing up front, only grow-and-replay top-ups — total
+    stream consumption is identical to letting the dispatch draw.
     """
     crit = criteria.get_criterion(criterion)
     kind = crit.name
@@ -1084,9 +1107,15 @@ def run_epoch_async(criterion, policy: str, *, X, D, C, FREE, phi, allowed,
         # pow2-bucket the stack height so growing `bound` within a bucket
         # cannot retrace the loop (perms shape is part of the jit key);
         # _perm_rows is a test hook that forces the grow-and-replay path.
-        seg = min(bound, max_steps_cap)
-        perms = _draw_perms(_perm_rows if _perm_rows is not None
-                            else _bucket(4 + 4 * ((seg + J - 1) // J)))
+        if preperms is not None:
+            pp = np.asarray(preperms, np.int32)
+            perms = np.empty((pp.shape[0], Jp), np.int32)
+            perms[:, :J] = pp[:, :J]
+            perms[:, J:] = np.arange(J, Jp)
+        else:
+            perms = _draw_perms(_perm_rows if _perm_rows is not None
+                                else rrr_perm_budget(bound, J,
+                                                     max_steps_cap))
     else:
         perms = np.arange(Jp, dtype=np.int32)[None, :]
 

@@ -1,0 +1,243 @@
+"""Precomputed-epoch cache: content-addressed grant sequences for O(1)
+repeat-profile allocation decisions.
+
+Motivation (Precomputed DRF, arXiv 2507.08846): a fair-allocation sequence
+is a pure function of the demand profile, so in steady-state traffic —
+where the same (demands, capacities, weights) profile arrives over and over
+— the fill loop only ever needs to run ONCE per distinct profile.  Our
+allocation epochs already are pure functions of the frozen
+:meth:`~repro.core.cluster_state.ClusterState.epoch_view` snapshot (the PR-4
+begin/commit protocol), which makes the cache a lookup table in front of the
+engine: fingerprint the frozen inputs, replay the recorded grant sequence on
+a hit, dispatch exactly as today on a miss.
+
+Fingerprint
+-----------
+:meth:`EpochCache.fingerprint` hashes (blake2b) a canonical byte encoding of
+every input the epoch outcome depends on:
+
+  * the frozen view arrays — ``D, C, X, Xr, FREE, phi, allowed, wanted`` —
+    plus the true-demand matrix ``TD``, each tagged and length/shape-prefixed
+    so fields can never run into each other;
+  * the configuration — criterion, server policy, mode, tie rule, engine
+    path (host / host-pergrant / fused), ``per_agent_limit``, the best-fit
+    metric, and the preemption config (threshold, eps);
+  * for fused RRR epochs, the **dispatch-time permutation prefix**: since
+    PR 4 all rng consumption happens at dispatch, the pre-drawn permutation
+    stack (whose height :func:`~repro.core.engine_jax.rrr_perm_budget` is a
+    pure function of the profile) is drawn BEFORE lookup and hashed into
+    the key — two epochs with equal profiles but different rng streams can
+    never share an entry.
+
+The view arrays are *name-sorted* (``epoch_view``), so fingerprints are
+independent of registration / dict-process order by construction: clusters
+built in any order that freeze to the same matrices hit the same entry.
+Framework/agent *names* are deliberately NOT part of the key — the cached
+outcome is a sequence of (framework-index, agent-index) pairs into the
+sorted view, replayed against whatever names occupy those rows at commit.
+
+What is cached, what stays live
+-------------------------------
+An entry stores the epoch's full outcome: the grant-index sequence exactly
+as the engine would read it back (the f64 re-validation and the live
+:meth:`~repro.core.online.OnlineAllocator._grant` application — including
+revocable-offer classification — run on REPLAY too, so a hit mutates state
+bit-for-bit like a fresh dispatch), plus the RRR grow-and-replay draw count
+and digest.  The epoch-level preemption pass always runs LIVE at begin time
+(it mutates state based on live framework structure before the view is
+frozen); its revocations ride on the ``InFlightEpoch``, never on the cache.
+Oblivious mode is never cached: its mid-epoch inferred-demand drift reads
+live framework state outside the frozen view.
+
+Eviction & telemetry
+--------------------
+Entries live in an LRU ordered by last use and bounded by a byte budget
+(``max_bytes``); stores that push past the budget evict from the cold end.
+``hits / misses / stores / evictions`` counters (and ``hit_rate``) are
+exposed via :meth:`EpochCache.stats` — surfaced per simulation cell in
+``benchmarks/scenario_sweep.py`` and per serve run in
+``repro.launch.alloc_serve``.
+
+A single :class:`EpochCache` may be shared by many allocators (the serving
+front-end's repeat-profile hits come from exactly that): it holds no
+allocator state, only profile -> outcome mappings.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+#: default LRU byte budget (~32 MiB holds ~10^5 hundred-grant outcomes)
+DEFAULT_MAX_BYTES = 32 << 20
+
+_DIGEST_SIZE = 20
+
+
+class EpochOutcome(NamedTuple):
+    """The cached result of one allocation epoch.
+
+    ``seq`` is the raw (framework-index, agent-index) grant sequence as the
+    engine produced it — BEFORE the f64 re-validation, which reruns live on
+    replay.  ``extra_perm_rows`` / ``extra_perm_digest`` record the RRR
+    grow-and-replay permutations drawn PAST the fingerprinted prefix: a hit
+    burns that many draws from the allocator rng (keeping the stream
+    position identical to a fresh run) and verifies their digest — on a
+    mismatch the entry is treated as a miss and the rng rewound, so an
+    (astronomically unlikely) prefix collision between different streams
+    can never replay the wrong sequence."""
+
+    seq: tuple                       # ((n, j), ...) into the sorted view
+    extra_perm_rows: int = 0         # RRR grow-and-replay draws past prefix
+    extra_perm_digest: bytes = b""   # digest of those draws (verification)
+
+    @property
+    def nbytes(self) -> int:
+        return 16 * len(self.seq) + len(self.extra_perm_digest) + 64
+
+
+def perm_digest(perms: np.ndarray) -> bytes:
+    """Order-sensitive digest of a permutation stack (rows as drawn)."""
+    h = hashlib.blake2b(digest_size=_DIGEST_SIZE)
+    h.update(np.ascontiguousarray(perms, np.int64).tobytes())
+    return h.digest()
+
+
+def _hash_field(h, tag: bytes, payload: bytes) -> None:
+    """Tag + length-prefix every field so encodings can never collide
+    across field boundaries (b'ab'+b'c' vs b'a'+b'bc')."""
+    h.update(tag)
+    h.update(len(payload).to_bytes(8, "little"))
+    h.update(payload)
+
+
+def _hash_array(h, tag: bytes, arr: np.ndarray) -> None:
+    a = np.ascontiguousarray(arr)
+    meta = f"{a.dtype.str}{a.shape}".encode()
+    _hash_field(h, tag + b"#", meta)
+    _hash_field(h, tag, a.tobytes())
+
+
+class EpochCache:
+    """Content-addressed LRU of precomputed epoch outcomes (module doc)."""
+
+    def __init__(self, max_bytes: int = DEFAULT_MAX_BYTES):
+        self.max_bytes = int(max_bytes)
+        self._entries: OrderedDict[bytes, EpochOutcome] = OrderedDict()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.stores = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- fingerprint ---------------------------------------------------------
+
+    @staticmethod
+    def fingerprint(view, TD, *, criterion: str, policy: str, mode: str,
+                    tie: str, engine: str,
+                    per_agent_limit: Optional[int] = None,
+                    bf_metric: Optional[str] = None,
+                    preemption: Optional[tuple] = None,
+                    perms: Optional[np.ndarray] = None) -> bytes:
+        """Byte-stable key over everything the epoch outcome depends on.
+
+        ``view`` is a frozen :class:`~repro.core.cluster_state.StateView`
+        (name-sorted, so dict/registration order cannot leak in); ``TD`` the
+        (N, R) true-demand matrix; ``engine`` the resolved backend path
+        (``host`` / ``host-pergrant`` / ``fused`` — entries never cross the
+        documented f32/tile tie-semantics boundaries); ``preemption`` is
+        ``(threshold, eps)`` or None; ``perms`` the dispatch-time RRR
+        permutation prefix (fused RRR only)."""
+        h = hashlib.blake2b(digest_size=_DIGEST_SIZE)
+        meta = "|".join((
+            "epoch-v1", criterion, policy, mode, tie, engine,
+            repr(per_agent_limit), repr(bf_metric), repr(preemption),
+        )).encode()
+        _hash_field(h, b"meta", meta)
+        _hash_array(h, b"X", view.X)
+        _hash_array(h, b"Xr", view.Xr if view.Xr is not None
+                    else np.zeros_like(view.X))
+        _hash_array(h, b"D", view.D)
+        _hash_array(h, b"C", view.C)
+        _hash_array(h, b"FREE", view.FREE)
+        _hash_array(h, b"phi", view.phi)
+        _hash_array(h, b"allowed", view.allowed)
+        _hash_array(h, b"wanted", view.wanted)
+        _hash_array(h, b"TD", np.asarray(TD))
+        if perms is not None:
+            _hash_array(h, b"perms", np.asarray(perms, np.int64))
+        return h.digest()
+
+    # -- LRU -----------------------------------------------------------------
+
+    def lookup(self, key: bytes) -> Optional[EpochOutcome]:
+        """Return the cached outcome (bumping it hot) or None; counts."""
+        out = self._entries.get(key)
+        if out is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return out
+
+    def unhit(self, key: bytes) -> None:
+        """Demote a counted hit back to a miss (the RRR extra-draw digest
+        failed verification — see :class:`EpochOutcome`)."""
+        self.hits -= 1
+        self.misses += 1
+
+    def store(self, key: bytes, outcome: EpochOutcome) -> None:
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= old.nbytes + len(key)
+        self._entries[key] = outcome
+        self.bytes += outcome.nbytes + len(key)
+        self.stores += 1
+        while self.bytes > self.max_bytes and len(self._entries) > 1:
+            k, v = self._entries.popitem(last=False)
+            self.bytes -= v.nbytes + len(k)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes = 0
+
+    # -- telemetry -----------------------------------------------------------
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "stores": self.stores, "evictions": self.evictions,
+            "entries": len(self._entries),
+            "bytes": self.bytes, "max_bytes": self.max_bytes,
+        }
+
+
+def get_cache(spec) -> Optional[EpochCache]:
+    """Normalize an ``epoch_cache`` config knob to an EpochCache or None.
+
+    ``None``/``False`` -> disabled; ``True`` -> a fresh default-budget
+    cache; an ``int`` -> a fresh cache with that byte budget; an
+    :class:`EpochCache` instance passes through (shared caches: many
+    allocators, one profile table)."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        return EpochCache()
+    if isinstance(spec, int):
+        return EpochCache(max_bytes=spec)
+    if isinstance(spec, EpochCache):
+        return spec
+    raise ValueError(f"epoch_cache must be None/bool/int/EpochCache, "
+                     f"got {spec!r}")

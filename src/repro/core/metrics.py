@@ -260,6 +260,75 @@ class FairnessTimelineHook(SimHook):
         }
 
 
+class LatencyStats:
+    """Streaming decision-latency accumulator (seconds in, ms out).
+
+    Used by the allocator serving front-end (``repro.launch.alloc_serve``)
+    and the cache-stats hook: record one latency per allocation decision
+    (or per epoch), read p50/p99 off the retained samples.  Retention is
+    capped — beyond ``max_samples`` a uniform thinning (keep every 2nd)
+    halves the series, which keeps quantiles representative without an
+    unbounded buffer in week-long serve runs."""
+
+    def __init__(self, max_samples: int = 1 << 20):
+        self.max_samples = int(max_samples)
+        self.n = 0
+        self.total_s = 0.0
+        self._samples: list = []
+
+    def record(self, seconds: float, count: int = 1) -> None:
+        """One timed span covering ``count`` decisions (an epoch granting
+        k executors records k decisions at seconds/k each)."""
+        self.n += count
+        self.total_s += float(seconds)
+        self._samples.append(float(seconds) / max(count, 1))
+        if len(self._samples) > self.max_samples:
+            self._samples = self._samples[::2]
+
+    def percentile_ms(self, q: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples), q)) * 1e3
+
+    def summary(self) -> dict:
+        return {
+            "decisions": self.n,
+            "total_s": self.total_s,
+            "mean_ms": (self.total_s / self.n * 1e3) if self.n else 0.0,
+            "p50_ms": self.percentile_ms(50),
+            "p99_ms": self.percentile_ms(99),
+        }
+
+
+class CacheStatsHook(SimHook):
+    """Epoch-cache telemetry: final hit/miss/eviction counters plus the
+    hit-rate trajectory over simulated time (steady-state workloads climb
+    toward 1.0 as the profile set saturates the cache).
+
+    Reads ``sim.alloc.epoch_cache`` at start — inert (empty summary) when
+    the allocator runs without a cache, so wiring the hook unconditionally
+    costs nothing."""
+
+    def __init__(self):
+        self.cache = None
+        self.t: list = []
+        self.hit_rate: list = []
+
+    def on_start(self, sim) -> None:
+        self.cache = getattr(sim.alloc, "epoch_cache", None)
+
+    def on_sample(self, sample: Sample) -> None:
+        if self.cache is None:
+            return
+        self.t.append(sample.t)
+        self.hit_rate.append(self.cache.hit_rate)
+
+    def summary(self) -> dict:
+        if self.cache is None:
+            return {}
+        return dict(self.cache.stats())
+
+
 class SlowdownHook(SimHook):
     """Per-group job slowdowns (observed duration / perfectly-parallel ideal)."""
 

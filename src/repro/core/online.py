@@ -74,6 +74,7 @@ from typing import Callable, NamedTuple, Optional
 import numpy as np
 
 from repro.core import criteria
+from repro.core import epoch_cache as _epoch_cache
 from repro.core import preemption as _preemption
 from repro.core.cluster_state import ClusterState, StateView
 from repro.core.engine import (
@@ -155,10 +156,19 @@ class InFlightEpoch:
     # ^ the epoch's preemption-pass output: revocations happen at BEGIN time
     #   (before the view freeze / device dispatch), the caller learns them
     #   here so async consumers can apply kill effects at the commit point.
+    cached_seq: Optional[tuple] = None  # epoch-cache HIT on a fused-path
+    #   config: the precomputed grant sequence, replayed at commit under the
+    #   same staleness guard / f64 re-validation as a device readback.
+    cache_key: Optional[bytes] = None   # epoch-cache MISS: fingerprint to
+    #   populate at commit (device paths) — host misses store at begin.
+    perm_rows0: int = 0                 # RRR permutation-prefix height drawn
+    #   before dispatch (cache enabled): commit records only the
+    #   grow-and-replay rows PAST it in the stored outcome.
 
     @property
     def in_flight(self) -> bool:
-        return self.handle is not None and not self.consumed
+        return ((self.handle is not None or self.cached_seq is not None)
+                and not self.consumed)
 
 
 class OnlineAllocator:
@@ -173,6 +183,7 @@ class OnlineAllocator:
         bf_metric: str = "cosine",
         seed: int = 0,
         preemption=None,                 # None | True | PreemptionPolicy
+        epoch_cache=None,                # None | True | bytes | EpochCache
     ):
         if mode not in ("characterized", "oblivious"):
             raise ValueError(mode)
@@ -192,6 +203,9 @@ class OnlineAllocator:
         self.bf_metric = bf_metric
         self.rng = np.random.default_rng(seed)
         self.state = ClusterState(n_resources)
+        #: content-addressed precomputed-epoch cache (None = disabled);
+        #: may be an instance SHARED across allocators (see epoch_cache.py)
+        self.epoch_cache = _epoch_cache.get_cache(epoch_cache)
         self.frameworks: dict[str, FrameworkState] = {}
         self._inflight_epoch: Optional[InFlightEpoch] = None
         self._fair_cache = None   # (state._version, ctot, level) memo
@@ -514,6 +528,111 @@ class OnlineAllocator:
             return "fused" if N * J >= min_cells else False
         raise ValueError(f"unknown use_kernel spec {use_kernel!r}")
 
+    # -- the precomputed-epoch cache (repro.core.epoch_cache) ----------------
+
+    def _cacheable(self, kernel, tie: str) -> bool:
+        """May this epoch serve from / populate the epoch cache?
+
+        Characterized mode only (oblivious epochs read live framework
+        state — inferred-demand drift — OUTSIDE the frozen view, so the
+        fingerprint cannot cover them), deterministic ``tie="low"`` only,
+        and RRR only on the fused path: the host RRR policy draws its
+        permutations lazily, one round at a time, so its rng consumption
+        depends on the outcome and cannot be pre-drawn into the key the
+        way the fused dispatch-time prefix can."""
+        if self.epoch_cache is None or self.mode != "characterized":
+            return False
+        if tie != "low":
+            return False
+        if self.server_policy == "rrr" and kernel != "fused":
+            return False
+        return True
+
+    def _draw_perm_rows(self, k: int, J: int) -> np.ndarray:
+        """k RRR permutation rows from the allocator rng — the same draws,
+        in the same order, ``engine_jax.run_epoch_async`` would make."""
+        rows = np.empty((k, J), np.int64)
+        for i in range(k):
+            rows[i] = self.rng.permutation(J)
+        return rows
+
+    def _cache_fingerprint(self, view, TD, *, kernel, tie, per_agent_limit):
+        """(key, preperms, perm_rows0) for this epoch's frozen inputs.
+
+        For fused RRR the permutation prefix is drawn HERE — before lookup,
+        from the same stream position a fresh dispatch would draw it — and
+        hashed into the key, so equal profiles under different rng streams
+        can never share an entry and stream consumption is identical with
+        the cache on or off."""
+        engine = {"fused": "fused", "pergrant": "host-pergrant",
+                  False: "host"}[kernel]
+        preperms, nperm0 = None, 0
+        if kernel == "fused" and self.server_policy == "rrr":
+            from repro.core import engine_jax
+
+            J = len(view.agents)
+            bound = engine_jax.grant_bound(
+                TD, view.FREE, view.X.sum(axis=1), view.wanted,
+                per_agent_limit)
+            if bound > 0:     # empty epochs draw nothing (dispatch parity)
+                nperm0 = engine_jax.rrr_perm_budget(bound, J)
+                preperms = self._draw_perm_rows(nperm0, J)
+        pre = self.preemption
+        key = _epoch_cache.EpochCache.fingerprint(
+            view, TD, criterion=self.criterion, policy=self.server_policy,
+            mode=self.mode, tie=tie, engine=engine,
+            per_agent_limit=per_agent_limit, bf_metric=self.bf_metric,
+            preemption=None if pre is None else (pre.threshold, pre.eps),
+            perms=preperms)
+        return key, preperms, nperm0
+
+    def _cache_burn_verify(self, key, outcome, J: int):
+        """Replay an RRR hit's grow-and-replay draws against the stored
+        digest.  Burns ``extra_perm_rows`` permutations so the rng stream
+        lands exactly where a fresh dispatch would leave it; a digest
+        mismatch (different stream behind a colliding prefix) rewinds the
+        stream and demotes the hit to a miss."""
+        if outcome.extra_perm_rows <= 0:
+            return outcome
+        state0 = self.rng.bit_generator.state
+        rows = self._draw_perm_rows(outcome.extra_perm_rows, J)
+        if _epoch_cache.perm_digest(rows) != outcome.extra_perm_digest:
+            self.rng.bit_generator.state = state0
+            self.epoch_cache.unhit(key)
+            return None
+        return outcome
+
+    def _cache_store_fused(self, epoch: InFlightEpoch, seq) -> None:
+        """Populate the cache at a device-epoch commit (miss path): the
+        sequence plus, for RRR, the permutation rows the run drew PAST the
+        fingerprinted prefix (with their digest, for hit-time burn)."""
+        extra, digest = 0, b""
+        perms = epoch.handle.perms
+        if self.server_policy == "rrr" and perms is not None:
+            extra = perms.shape[0] - epoch.perm_rows0
+            if extra > 0:
+                J = len(epoch.view.agents)
+                digest = _epoch_cache.perm_digest(
+                    perms[epoch.perm_rows0:, :J])
+        self.epoch_cache.store(
+            epoch.cache_key,
+            _epoch_cache.EpochOutcome(tuple(seq), extra, digest))
+
+    def _apply_seq(self, view, TD, seq) -> list[Grant]:
+        """Apply a raw (n, j) grant sequence — a device readback or a cache
+        replay — against the LIVE state: re-validate each grant in f64 (the
+        device loop tracks FREE in f32, exact for quantized demands but
+        driftable for non-dyadic ones — never let a drifted grant drive
+        free capacity negative) and funnel it through :meth:`_grant`, so
+        revocable-offer classification always runs live."""
+        grants: list[Grant] = []
+        for n, j in seq:
+            slot = self.state.agent2slot[view.agents[j]]
+            if (TD[n] > self.state.FREE[slot] + 1e-9).any():
+                break
+            grants.append(self._grant(view.fids[n], view.agents[j]))
+        return grants
+
     def _resolve_partition(self, use_kernel, N: int, J: int, shards: int,
                            devices: int):
         """Clamp a requested fused-epoch partitioning under ``"auto"``.
@@ -577,6 +696,39 @@ class OnlineAllocator:
                 TD[i] = self._true_demand(f)
         TD.setflags(write=False)
         kernel = self._resolve_kernel(use_kernel, N, len(view.agents), tie)
+
+        # precomputed-epoch lookup BEFORE any dispatch: a hit skips the
+        # engine entirely and replays the recorded sequence — deferred to
+        # commit on the fused path (parity with a device readback: guard
+        # armed, revocations refused in between), applied eagerly here on
+        # host paths (parity with the host fallback, which also applies at
+        # begin).  A miss remembers the key and dispatches exactly as
+        # without a cache.
+        key = preperms = None
+        nperm0 = 0
+        if self._cacheable(kernel, tie):
+            key, preperms, nperm0 = self._cache_fingerprint(
+                view, TD, kernel=kernel, tie=tie,
+                per_agent_limit=per_agent_limit)
+            out = self.epoch_cache.lookup(key)
+            if out is not None:
+                out = self._cache_burn_verify(key, out, len(view.agents))
+            if out is not None:
+                if kernel == "fused":
+                    epoch = InFlightEpoch(view=view, TD=TD,
+                                          per_agent_limit=per_agent_limit,
+                                          cached_seq=out.seq,
+                                          guard=self.state.mutation_count,
+                                          revocations=revs)
+                    self._inflight_epoch = epoch
+                    return epoch
+                grants = self._apply_seq(view, TD, out.seq)
+                return InFlightEpoch(view=view, TD=TD,
+                                     per_agent_limit=per_agent_limit,
+                                     grants=grants,
+                                     guard=self.state.mutation_count,
+                                     revocations=revs)
+
         if kernel == "fused":
             from repro.core import engine_jax
 
@@ -588,17 +740,20 @@ class OnlineAllocator:
                 phi=view.phi, allowed=view.allowed, wanted=view.wanted,
                 true_demands=TD, per_agent_limit=per_agent_limit,
                 lookahead=False, rng=self.rng, shards=shards,
-                devices=devices,
+                devices=devices, preperms=preperms,
             )
             epoch = InFlightEpoch(view=view, TD=TD,
                                   per_agent_limit=per_agent_limit,
                                   handle=handle,
                                   guard=self.state.mutation_count,
-                                  revocations=revs)
+                                  revocations=revs, cache_key=key,
+                                  perm_rows0=nperm0)
             self._inflight_epoch = epoch
             return epoch
-        grants = self._allocate_batched_host(per_agent_limit, tie, kernel,
-                                             view, TD)
+        grants, seq = self._allocate_batched_host(per_agent_limit, tie,
+                                                  kernel, view, TD)
+        if key is not None:   # host miss: applied already, store eagerly
+            self.epoch_cache.store(key, _epoch_cache.EpochOutcome(tuple(seq)))
         return InFlightEpoch(view=view, TD=TD,
                              per_agent_limit=per_agent_limit, grants=grants,
                              guard=self.state.mutation_count,
@@ -627,24 +782,19 @@ class OnlineAllocator:
                 "cluster state mutated while an allocation epoch was in "
                 "flight; commit_epoch() must run before any other allocator "
                 "mutation")
+        if epoch.cached_seq is not None:   # epoch-cache hit: replay
+            return self._apply_seq(epoch.view, epoch.TD, epoch.cached_seq)
         seq = epoch.handle.result()
-        grants: list[Grant] = []
-        for n, j in seq:
-            # re-validate in f64 before mutating host state: the device
-            # loop tracks FREE in f32, which is exact for quantized demands
-            # but can drift for non-dyadic ones — never let a drifted grant
-            # drive free capacity negative.
-            slot = self.state.agent2slot[epoch.view.agents[j]]
-            if (epoch.TD[n] > self.state.FREE[slot] + 1e-9).any():
-                break
-            grants.append(self._grant(epoch.view.fids[n],
-                                      epoch.view.agents[j]))
-        return grants
+        if epoch.cache_key is not None and self.epoch_cache is not None:
+            self._cache_store_fused(epoch, seq)
+        return self._apply_seq(epoch.view, epoch.TD, seq)
 
     def _allocate_batched_host(self, per_agent_limit, tie, kernel,
-                               view, TD) -> list[Grant]:
+                               view, TD):
         """The numpy incremental epoch (optionally the per-grant Pallas
-        backend) over a frozen view — the host half of the epoch pipeline."""
+        backend) over a frozen view — the host half of the epoch pipeline.
+        Returns ``(grants, seq)``: the applied grants plus the raw (n, j)
+        pick sequence (what the epoch cache stores)."""
         usage = None
         if self.mode == "oblivious":
             usage = np.array([self.frameworks[f].usage for f in view.fids])
@@ -657,12 +807,14 @@ class OnlineAllocator:
             usage=usage, use_kernel=(kernel == "pergrant"),
         )
         grants: list[Grant] = []
+        seq: list[tuple[int, int]] = []
         passes_d = self.crit.server_specific and self.mode == "oblivious"
         for _ in range(100_000):
             pick = epoch.select()
             if pick is None:
-                return grants
+                return grants, seq
             n, j = pick
+            seq.append((n, j))
             fid = view.fids[n]
             g = self._grant(fid, view.agents[j])
             grants.append(g)

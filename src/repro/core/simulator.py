@@ -90,6 +90,10 @@ class SimConfig:
     preemption: bool = False             # revocable offers + the epoch-level
                                          # preemption pass (repro.core.preemption)
     preemption_threshold: float = 1.0    # over-share factor for revocability
+    epoch_cache: object = False          # precomputed-epoch cache: False |
+                                         # True | byte budget | EpochCache
+                                         # (repro.core.epoch_cache; instances
+                                         # may be shared across sims)
     seed: int = 0
 
 
@@ -104,6 +108,7 @@ class SimResult:
     executors_revoked: int = 0           # preemption: executors killed
     tasks_requeued_on_revoke: int = 0    # preemption: busy tasks requeued
     revoked_wasted_s: float = 0.0        # preemption: task-seconds thrown away
+    cache_stats: Optional[dict] = None   # epoch-cache counters (None = no cache)
 
     def _series(self, col: int):
         return self.timeline[:, 0], self.timeline[:, col]
@@ -199,7 +204,7 @@ class SparkMesosSim:
         self.alloc = OnlineAllocator(
             n_resources=R, criterion=cfg.criterion, server_policy=cfg.server_policy,
             mode=cfg.mode, bf_metric=cfg.bf_metric, seed=cfg.seed,
-            preemption=preempt,
+            preemption=preempt, epoch_cache=cfg.epoch_cache,
         )
         self.alloc.framework_demand_oracle = self._demand_oracle
         self.jobs: dict[str, _Job] = {}
@@ -558,6 +563,8 @@ class SparkMesosSim:
             executors_revoked=self.n_revoked,
             tasks_requeued_on_revoke=self.n_requeued_on_revoke,
             revoked_wasted_s=self.revoked_wasted_s,
+            cache_stats=(self.alloc.epoch_cache.stats()
+                         if self.alloc.epoch_cache is not None else None),
         )
 
 

@@ -1,0 +1,228 @@
+"""Allocator-as-a-service driver: precomputed-epoch serving front-end.
+
+Distinct from the model-serving driver (:mod:`repro.launch.serve`): this one
+serves *allocation decisions*.  Incoming allocation requests (framework
+demand profiles asking for executors) are batched into allocation epochs
+through the existing begin/commit pipeline of
+:class:`~repro.core.online.OnlineAllocator`, fronted by the precomputed-epoch
+cache (:mod:`repro.core.epoch_cache`): steady-state traffic repeats a small
+set of (demands, capacities, weights) profiles, so after the first
+occurrence of each profile every epoch is a cache hit — a fingerprint lookup
+plus a grant replay instead of a device dispatch.  The driver reports
+served-decisions/sec, decision-latency p50/p99
+(:class:`~repro.core.metrics.LatencyStats`) and the cache counters.
+
+    PYTHONPATH=src python -m repro.launch.alloc_serve --smoke \
+        --out SERVE_cache_stats.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core import metrics as _metrics
+from repro.core.online import OnlineAllocator
+
+#: demand vectors in quarter multiples (binary-exact f32/f64 arithmetic —
+#: release/re-register round-trips reproduce the profile bit-for-bit, the
+#: property repeat-profile hits depend on); same convention as
+#: benchmarks/allocator_bench.py.
+_AGENT_TYPES = ((16.0, 64.0), (32.0, 128.0), (8.0, 32.0), (64.0, 256.0))
+
+
+class AllocRequest(NamedTuple):
+    """One allocation request: a framework asking for executors."""
+
+    fid: str
+    demand: tuple          # per-executor demand vector
+    n_executors: int       # executors wanted
+    phi: float = 1.0       # priority weight
+
+
+class AllocatorService:
+    """Batches allocation requests into cached epochs (module docstring).
+
+    ``submit()`` enqueues requests; ``drain_epoch()`` applies the queue to
+    the allocator (register / top-up wanted) and runs ONE allocation epoch
+    through begin/commit — served from the epoch cache whenever the frozen
+    profile has been seen before.  ``complete()`` hands a finished
+    framework's executors back (the steady-state release half that makes
+    profiles recur).  The cache may be a shared
+    :class:`~repro.core.epoch_cache.EpochCache` instance so many service
+    replicas serve from one profile table."""
+
+    def __init__(self, n_resources: int, agents: Sequence, *,
+                 criterion="drf", server_policy: str = "pooled",
+                 epoch_cache=True, use_kernel="auto", seed: int = 0):
+        self.alloc = OnlineAllocator(
+            n_resources, criterion=criterion, server_policy=server_policy,
+            seed=seed, epoch_cache=epoch_cache)
+        for name, cap in agents:
+            self.alloc.add_agent(name, cap)
+        self.use_kernel = use_kernel
+        self.latency = _metrics.LatencyStats()
+        self.decisions = 0
+        self.epochs = 0
+        self._queue: list[AllocRequest] = []
+
+    def submit(self, req: AllocRequest) -> None:
+        self._queue.append(req)
+
+    def drain_epoch(self) -> list:
+        """Apply queued requests, run one (cached) epoch, return grants."""
+        for req in self._queue:
+            fw = self.alloc.frameworks.get(req.fid)
+            if fw is None:
+                self.alloc.register(req.fid, demand=req.demand,
+                                    wanted_tasks=req.n_executors,
+                                    phi=req.phi)
+            else:
+                self.alloc.set_wanted(
+                    req.fid, fw.wanted_tasks + req.n_executors)
+        self._queue.clear()
+        t0 = time.perf_counter()
+        grants = self.alloc.commit_epoch(
+            self.alloc.begin_epoch(use_kernel=self.use_kernel))
+        dt = time.perf_counter() - t0
+        self.latency.record(dt, max(len(grants), 1))
+        self.decisions += len(grants)
+        self.epochs += 1
+        return grants
+
+    def complete(self, fid: str) -> None:
+        """A framework finished: release its executors and deregister —
+        freed capacity re-enters the pool, the profile can recur."""
+        fw = self.alloc.frameworks.get(fid)
+        if fw is None:
+            return
+        for agent in list(fw.tasks):
+            while fw.tasks.get(agent):
+                self.alloc.release_executor(fid, agent)
+        self.alloc.deregister(fid)
+
+    def stats(self) -> dict:
+        cache = self.alloc.epoch_cache
+        return {
+            "epochs": self.epochs,
+            "decisions": self.decisions,
+            "latency": self.latency.summary(),
+            "cache": cache.stats() if cache is not None else None,
+        }
+
+
+def make_profiles(n_profiles: int, n_frameworks: int, n_resources: int = 2,
+                  seed: int = 0) -> list:
+    """Distinct repeat-profiles: request batches with quantized demands."""
+    rng = np.random.default_rng(seed)
+    profiles = []
+    for p in range(n_profiles):
+        reqs = []
+        for i in range(n_frameworks):
+            d = tuple(0.25 * int(rng.integers(1, 9))
+                      for _ in range(n_resources))
+            reqs.append(AllocRequest(fid=f"fw{i}", demand=d,
+                                     n_executors=int(rng.integers(2, 9)),
+                                     phi=float(1 + (i % 3))))
+        profiles.append(reqs)
+    return profiles
+
+
+def drive(service: AllocatorService, profiles: list, rounds: int) -> dict:
+    """Serve ``rounds`` request batches cycling over the profile set.
+
+    Each round submits one profile's requests, drains an epoch, and
+    completes every framework (executors release, capacity returns), so
+    from the second cycle on every epoch replays from the cache.  Returns
+    the service stats plus wall-clock throughput."""
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        for req in profiles[r % len(profiles)]:
+            service.submit(req)
+        grants = service.drain_epoch()
+        for fid in {g.fid for g in grants}:
+            service.complete(fid)
+        # frameworks whose demand fit nowhere still leave the roster, so
+        # the next round's registration recreates the profile exactly
+        for fid in list(service.alloc.frameworks):
+            service.complete(fid)
+    wall = time.perf_counter() - t0
+    out = service.stats()
+    out["wall_s"] = wall
+    out["decisions_per_s"] = service.decisions / max(wall, 1e-12)
+    return out
+
+
+def serve(n_agents: int = 64, n_frameworks: int = 40, n_profiles: int = 4,
+          rounds: int = 64, criterion: str = "drf",
+          server_policy: str = "pooled", use_kernel="auto",
+          epoch_cache=True, seed: int = 0) -> dict:
+    agents = [(f"a{j}", _AGENT_TYPES[j % len(_AGENT_TYPES)])
+              for j in range(n_agents)]
+    service = AllocatorService(
+        2, agents, criterion=criterion, server_policy=server_policy,
+        epoch_cache=epoch_cache, use_kernel=use_kernel, seed=seed)
+    profiles = make_profiles(n_profiles, n_frameworks, seed=seed)
+    out = drive(service, profiles, rounds)
+    out["config"] = {
+        "n_agents": n_agents, "n_frameworks": n_frameworks,
+        "n_profiles": n_profiles, "rounds": rounds, "criterion": criterion,
+        "server_policy": server_policy, "use_kernel": str(use_kernel),
+        "epoch_cache": bool(epoch_cache), "seed": seed,
+    }
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--agents", type=int, default=64)
+    ap.add_argument("--frameworks", type=int, default=40)
+    ap.add_argument("--profiles", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=64)
+    ap.add_argument("--criterion", default="drf")
+    ap.add_argument("--policy", default="pooled",
+                    choices=("pooled", "rrr", "bestfit"))
+    ap.add_argument("--kernel", default="auto")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="serve without the epoch cache (baseline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fixed workload + cache-effectiveness assert")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write stats JSON here")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.agents, args.frameworks = min(args.agents, 64), 40
+        args.profiles, args.rounds = 4, 32
+    out = serve(n_agents=args.agents, n_frameworks=args.frameworks,
+                n_profiles=args.profiles, rounds=args.rounds,
+                criterion=args.criterion, server_policy=args.policy,
+                use_kernel=args.kernel, epoch_cache=not args.no_cache,
+                seed=args.seed)
+    if args.smoke and not args.no_cache:
+        cache = out["cache"]
+        # every round past the first profile cycle must replay from cache
+        expect = args.rounds - args.profiles
+        assert cache["hits"] >= expect, \
+            f"serve smoke: {cache['hits']} hits < {expect} expected " \
+            f"({cache})"
+        print(f"serve smoke OK: hit_rate={cache['hit_rate']:.3f} "
+              f"({cache['hits']}/{cache['hits'] + cache['misses']})")
+    print(json.dumps({k: out[k] for k in
+                      ("decisions", "wall_s", "decisions_per_s")},
+                     indent=2))
+    if args.out:
+        import pathlib
+
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(out, indent=2))
+        print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()
