@@ -134,6 +134,12 @@ MESH_TRACE_COUNT = 0
 #: one-dispatch-per-epoch acceptance test reads this.
 DISPATCH_COUNT = 0
 
+#: chaos hook (:mod:`repro.core.faults`): when set, called with no args
+#: before EVERY fused dispatch — including chained grow-and-replay
+#: segments — so a test can simulate an XLA/device failure at any dispatch
+#: boundary by raising.  None in production.
+fault_hook = None
+
 COVERED_CRITERIA = ("drf", "tsf", "psdsf", "rpsdsf")
 COVERED_POLICIES = ("pooled", "rrr")
 
@@ -898,6 +904,8 @@ class _EpochRun:
     def dispatch(self, X_cur, FREE_cur, used_cur):
         global DISPATCH_COUNT
         DISPATCH_COUNT += 1
+        if fault_hook is not None:
+            fault_hook()
         self.max_steps = _bucket(min(self.remaining, self.max_steps_cap),
                                  lo=16)
         if self.policy == "rrr" and not self.donate:

@@ -87,15 +87,23 @@ class EpochOutcome(NamedTuple):
     position identical to a fresh run) and verifies their digest — on a
     mismatch the entry is treated as a miss and the rng rewound, so an
     (astronomically unlikely) prefix collision between different streams
-    can never replay the wrong sequence."""
+    can never replay the wrong sequence.
+
+    ``seq_digest`` is a blake2b digest of the grant sequence itself,
+    verified on every hit (:func:`verify_seq`): a corrupted entry — bit
+    rot, a bad actor, or the chaos harness's injected corruption — is
+    evicted and the epoch falls back to a fresh dispatch instead of
+    committing garbage.  Empty = legacy/unverified entry."""
 
     seq: tuple                       # ((n, j), ...) into the sorted view
     extra_perm_rows: int = 0         # RRR grow-and-replay draws past prefix
     extra_perm_digest: bytes = b""   # digest of those draws (verification)
+    seq_digest: bytes = b""          # digest of seq (hit integrity check)
 
     @property
     def nbytes(self) -> int:
-        return 16 * len(self.seq) + len(self.extra_perm_digest) + 64
+        return (16 * len(self.seq) + len(self.extra_perm_digest)
+                + len(self.seq_digest) + 64)
 
 
 def perm_digest(perms: np.ndarray) -> bytes:
@@ -103,6 +111,26 @@ def perm_digest(perms: np.ndarray) -> bytes:
     h = hashlib.blake2b(digest_size=_DIGEST_SIZE)
     h.update(np.ascontiguousarray(perms, np.int64).tobytes())
     return h.digest()
+
+
+def seq_digest_of(seq) -> bytes:
+    """Digest of a grant sequence (length-prefixed so () and ((0,0),)*0
+    pads can't collide) — stored at cache-populate, checked on every hit."""
+    h = hashlib.blake2b(digest_size=_DIGEST_SIZE)
+    h.update(len(seq).to_bytes(8, "little"))
+    if len(seq):
+        h.update(np.ascontiguousarray(np.asarray(seq, np.int64)).tobytes())
+    return h.digest()
+
+
+def verify_seq(outcome: EpochOutcome) -> bool:
+    """Hit-integrity check: does the stored sequence match its digest?
+
+    Legacy entries (no digest) pass vacuously — integrity is opt-in per
+    entry so old pickled/constructed outcomes keep working."""
+    if not outcome.seq_digest:
+        return True
+    return seq_digest_of(outcome.seq) == outcome.seq_digest
 
 
 def _hash_field(h, tag: bytes, payload: bytes) -> None:
@@ -131,6 +159,7 @@ class EpochCache:
         self.misses = 0
         self.stores = 0
         self.evictions = 0
+        self.corruption_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -203,6 +232,33 @@ class EpochCache:
             self.bytes -= v.nbytes + len(k)
             self.evictions += 1
 
+    def evict_corrupt(self, key: bytes) -> None:
+        """Drop a corrupted entry (hit-time ``seq_digest`` mismatch) and
+        demote its counted hit to a miss — the caller falls back to a
+        fresh dispatch, which re-stores a clean entry on commit."""
+        out = self._entries.pop(key, None)
+        if out is not None:
+            self.bytes -= out.nbytes + len(key)
+        self.corruption_evictions += 1
+        self.unhit(key)
+
+    def corrupt_entry(self, rng=None) -> Optional[bytes]:
+        """Chaos helper: flip the first grant of one cached sequence while
+        keeping its (now stale) digest, returning the corrupted key — the
+        next hit must detect and evict it.  Returns None if no entry holds
+        a non-empty digested sequence."""
+        keys = [k for k, v in self._entries.items()
+                if v.seq and v.seq_digest]
+        if not keys:
+            return None
+        idx = 0 if rng is None else int(rng.integers(len(keys)))
+        key = keys[idx]
+        out = self._entries[key]
+        n, j = out.seq[0]
+        self._entries[key] = out._replace(
+            seq=((n + 1, j),) + tuple(out.seq[1:]))
+        return key
+
     def clear(self) -> None:
         self._entries.clear()
         self.bytes = 0
@@ -219,6 +275,7 @@ class EpochCache:
             "hits": self.hits, "misses": self.misses,
             "hit_rate": self.hit_rate,
             "stores": self.stores, "evictions": self.evictions,
+            "corruption_evictions": self.corruption_evictions,
             "entries": len(self._entries),
             "bytes": self.bytes, "max_bytes": self.max_bytes,
         }

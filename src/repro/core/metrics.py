@@ -140,8 +140,46 @@ class SimHook:
         are identical to pre-preemption runs."""
         pass
 
+    def on_fault(self, t: float, kind: str, info: dict) -> None:
+        """Chaos (repro.core.faults): a fault fired — an injected agent
+        crash / framework disconnect / cache corruption, or an allocator-
+        level failure (dispatch/commit error, quarantine, commit refusal).
+        Only called on actual fault events, so hook streams of fault-free
+        runs are identical to pre-chaos runs."""
+        pass
+
+    def on_recovery(self, t: float, kind: str, info: dict) -> None:
+        """Chaos: a recovery action succeeded (retry-success, host-fallback,
+        probe-success, agent-restart, fw-rejoin).  Same no-fault-stream
+        guarantee as :meth:`on_fault`."""
+        pass
+
     def on_end(self, t: float) -> None:
         pass
+
+
+class FaultLogHook(SimHook):
+    """Records every fault and recovery event (the chaos suite's witness):
+    ``faults`` / ``recoveries`` hold (t, kind, info) tuples, ``counts``
+    aggregates per kind."""
+
+    def __init__(self):
+        self.faults: list = []
+        self.recoveries: list = []
+        self.counts: dict = {}
+
+    def on_fault(self, t, kind, info) -> None:
+        self.faults.append((t, kind, info))
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+
+    def on_recovery(self, t, kind, info) -> None:
+        self.recoveries.append((t, kind, info))
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+
+    def summary(self) -> dict:
+        return {"n_faults": len(self.faults),
+                "n_recoveries": len(self.recoveries),
+                "counts": dict(self.counts)}
 
 
 class GrantLogHook(SimHook):

@@ -69,12 +69,15 @@ the commit point.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 
 from repro.core import criteria
 from repro.core import epoch_cache as _epoch_cache
+from repro.core import faults as _faults
+from repro.core import invariants as _invariants
 from repro.core import preemption as _preemption
 from repro.core.cluster_state import ClusterState, StateView
 from repro.core.engine import (
@@ -164,6 +167,13 @@ class InFlightEpoch:
     perm_rows0: int = 0                 # RRR permutation-prefix height drawn
     #   before dispatch (cache enabled): commit records only the
     #   grow-and-replay rows PAST it in the stored outcome.
+    rng_state0: Optional[dict] = None   # allocator rng state BEFORE any of
+    #   this epoch's draws: abort/recovery rewinds to it so the stream is
+    #   exactly where it would be had the epoch never begun (and a host
+    #   re-run of a failed fused epoch draws the identical sequence).
+    tie: str = "low"                    # epoch knobs kept for recovery
+    shards: int = 1                     #   re-dispatch (commit-time retry
+    devices: int = 1                    #   of a failed device readback).
 
     @property
     def in_flight(self) -> bool:
@@ -184,6 +194,9 @@ class OnlineAllocator:
         seed: int = 0,
         preemption=None,                 # None | True | PreemptionPolicy
         epoch_cache=None,                # None | True | bytes | EpochCache
+        recovery=None,                   # None | RecoveryPolicy (faults.py)
+        fault_injector=None,             # faults.EngineFaultInjector (chaos)
+        audit: bool = False,             # run invariants.py after epochs
     ):
         if mode not in ("characterized", "oblivious"):
             raise ValueError(mode)
@@ -211,6 +224,38 @@ class OnlineAllocator:
         self._fair_cache = None   # (state._version, ctot, level) memo
         #: revocations of the most recent allocation epoch's preemption pass
         self.last_revocations: list = []
+        # -- self-healing dispatch (repro.core.faults; docs/robustness.md) --
+        #: retry/backoff/quarantine knobs
+        self.recovery = _faults.get_recovery(recovery)
+        #: chaos: injected device-dispatch errors (None = no injection)
+        self.fault_injector = fault_injector
+        #: consecutive-failure tracking + device-path quarantine state
+        self.device_health = _faults.DeviceHealth(
+            quarantine_after=self.recovery.quarantine_after,
+            probe_every=self.recovery.probe_every)
+        #: fault/recovery counters (see fault_counters())
+        self.fault_stats = _faults.FaultStats()
+        #: callables (kind: str, info: dict) -> None notified on every
+        #: fault/recovery event — the simulator forwards these to the
+        #: metrics SimHook.on_fault/on_recovery callbacks
+        self.fault_listeners: list = []
+        #: run the ledger invariant auditor after every epoch (chaos mode)
+        self.audit = bool(audit)
+
+    # -- fault/recovery surface (repro.core.faults) --------------------------
+
+    def _notify_fault(self, kind: str, **info) -> None:
+        for cb in self.fault_listeners:
+            cb(kind, info)
+
+    def fault_counters(self) -> dict:
+        """Merged fault/recovery counters: FaultStats + device health +
+        (when installed) the injector's injection counts."""
+        out = self.fault_stats.as_dict()
+        out.update(self.device_health.counters())
+        if self.fault_injector is not None:
+            out.update(self.fault_injector.counters())
+        return out
 
     # -- dict-style views (read-only; canonical data is in self.state) -------
 
@@ -442,6 +487,8 @@ class OnlineAllocator:
             )
             g = self._allocate_one(blocked)
             if g is None:
+                if self.audit:
+                    _invariants.assert_invariants(self)
                 return grants
             used[g.agent] = used.get(g.agent, 0) + 1
             grants.append(g)
@@ -513,6 +560,11 @@ class OnlineAllocator:
                 # differs from the numpy policy's — auto must never make a
                 # seeded run's grant sequences depend on backend or cluster
                 # size.  Fused RRR stays an explicit opt-in.
+                return False
+            if not self.device_health.allow_auto_device():
+                # quarantined device path (K consecutive fused failures):
+                # auto degrades to the host engine until a probe epoch —
+                # every probe_every-th auto resolution — succeeds.
                 return False
             try:
                 import jax
@@ -604,8 +656,10 @@ class OnlineAllocator:
 
     def _cache_store_fused(self, epoch: InFlightEpoch, seq) -> None:
         """Populate the cache at a device-epoch commit (miss path): the
-        sequence plus, for RRR, the permutation rows the run drew PAST the
-        fingerprinted prefix (with their digest, for hit-time burn)."""
+        sequence (digested, so hit-time integrity verification can detect
+        a corrupted entry) plus, for RRR, the permutation rows the run
+        drew PAST the fingerprinted prefix (with their digest, for
+        hit-time burn)."""
         extra, digest = 0, b""
         perms = epoch.handle.perms
         if self.server_policy == "rrr" and perms is not None:
@@ -614,9 +668,11 @@ class OnlineAllocator:
                 J = len(epoch.view.agents)
                 digest = _epoch_cache.perm_digest(
                     perms[epoch.perm_rows0:, :J])
+        seq = tuple(seq)
         self.epoch_cache.store(
             epoch.cache_key,
-            _epoch_cache.EpochOutcome(tuple(seq), extra, digest))
+            _epoch_cache.EpochOutcome(seq, extra, digest,
+                                      _epoch_cache.seq_digest_of(seq)))
 
     def _apply_seq(self, view, TD, seq) -> list[Grant]:
         """Apply a raw (n, j) grant sequence — a device readback or a cache
@@ -643,7 +699,13 @@ class OnlineAllocator:
         floors (:data:`repro.core.engine.AUTO_SHARD_MIN_CELLS` /
         :data:`~repro.core.engine.AUTO_MESH_MIN_CELLS`) and collapses them
         to the plain fused dispatch below.  Explicit ``use_kernel`` specs
-        are a stated choice and pass through untouched."""
+        are a stated choice and pass through untouched — EXCEPT while the
+        device path is quarantined (see :class:`~repro.core.faults
+        .DeviceHealth`): a failing device mesh degrades to a single device
+        on every path until a probe epoch succeeds (health trumps sizing).
+        """
+        if self.device_health.quarantined and devices > 1:
+            devices = 1
         if use_kernel != "auto":
             return shards, devices
         cells = N * J
@@ -682,6 +744,13 @@ class OnlineAllocator:
         # the dispatched epoch scores the post-revocation state and the
         # staleness guard below is armed after it.
         revs = self._preempt_pass()
+        # the recovery anchor: every draw this epoch makes (RRR preperm
+        # prefix, host per-round permutations, grow-and-replay top-ups)
+        # happens past this point, so abort_epoch()/self-healing can rewind
+        # the stream to exactly the pre-epoch position.  Captured AFTER the
+        # preemption pass (rng-free, but its revocations are live mutations
+        # that stand regardless — same as on the synchronous path).
+        rng_state0 = self.rng.bit_generator.state
         if not self.frameworks or self.state.n_agents == 0:
             return InFlightEpoch(view=None, TD=None,
                                  per_agent_limit=per_agent_limit, grants=[],
@@ -711,6 +780,14 @@ class OnlineAllocator:
                 view, TD, kernel=kernel, tie=tie,
                 per_agent_limit=per_agent_limit)
             out = self.epoch_cache.lookup(key)
+            if out is not None and not _epoch_cache.verify_seq(out):
+                # hit integrity: a corrupted entry (grant-sequence digest
+                # mismatch) is evicted and the epoch falls through to a
+                # fresh dispatch instead of committing garbage.
+                self.epoch_cache.evict_corrupt(key)
+                self.fault_stats.cache_corruptions_evicted += 1
+                self._notify_fault("cache-corrupt-evict")
+                out = None
             if out is not None:
                 out = self._cache_burn_verify(key, out, len(view.agents))
             if out is not None:
@@ -719,10 +796,13 @@ class OnlineAllocator:
                                           per_agent_limit=per_agent_limit,
                                           cached_seq=out.seq,
                                           guard=self.state.mutation_count,
-                                          revocations=revs)
+                                          revocations=revs,
+                                          rng_state0=rng_state0, tie=tie)
                     self._inflight_epoch = epoch
                     return epoch
                 grants = self._apply_seq(view, TD, out.seq)
+                if self.audit:
+                    _invariants.assert_invariants(self)
                 return InFlightEpoch(view=view, TD=TD,
                                      per_agent_limit=per_agent_limit,
                                      grants=grants,
@@ -730,30 +810,37 @@ class OnlineAllocator:
                                      revocations=revs)
 
         if kernel == "fused":
-            from repro.core import engine_jax
-
             shards, devices = self._resolve_partition(
                 use_kernel, N, len(view.agents), shards, devices)
-            handle = engine_jax.run_epoch_async(
-                self.crit, self.server_policy,
-                X=view.X, D=view.D, C=view.C, FREE=view.FREE,
-                phi=view.phi, allowed=view.allowed, wanted=view.wanted,
-                true_demands=TD, per_agent_limit=per_agent_limit,
-                lookahead=False, rng=self.rng, shards=shards,
-                devices=devices, preperms=preperms,
-            )
-            epoch = InFlightEpoch(view=view, TD=TD,
-                                  per_agent_limit=per_agent_limit,
-                                  handle=handle,
-                                  guard=self.state.mutation_count,
-                                  revocations=revs, cache_key=key,
-                                  perm_rows0=nperm0)
-            self._inflight_epoch = epoch
-            return epoch
+            handle = self._dispatch_fused(view, TD, per_agent_limit,
+                                          shards, devices, preperms)
+            if handle is not None:
+                epoch = InFlightEpoch(view=view, TD=TD,
+                                      per_agent_limit=per_agent_limit,
+                                      handle=handle,
+                                      guard=self.state.mutation_count,
+                                      revocations=revs, cache_key=key,
+                                      perm_rows0=nperm0,
+                                      rng_state0=rng_state0, tie=tie,
+                                      shards=shards, devices=devices)
+                self._inflight_epoch = epoch
+                return epoch
+            # device path down (retries exhausted): self-heal on the host
+            # engine with the rng rewound to its pre-draw position — for
+            # RRR the lazy host draws then replay the identical stream the
+            # fused pre-draw consumed, so the grant sequence is
+            # bit-identical to the no-fault fused run (engine parity).
+            self.rng.bit_generator.state = rng_state0
+            kernel = False
+            key = None   # host-run grants must not populate the fused key
         grants, seq = self._allocate_batched_host(per_agent_limit, tie,
                                                   kernel, view, TD)
         if key is not None:   # host miss: applied already, store eagerly
-            self.epoch_cache.store(key, _epoch_cache.EpochOutcome(tuple(seq)))
+            seq = tuple(seq)
+            self.epoch_cache.store(key, _epoch_cache.EpochOutcome(
+                seq, seq_digest=_epoch_cache.seq_digest_of(seq)))
+        if self.audit:
+            _invariants.assert_invariants(self)
         return InFlightEpoch(view=view, TD=TD,
                              per_agent_limit=per_agent_limit, grants=grants,
                              guard=self.state.mutation_count,
@@ -778,16 +865,181 @@ class OnlineAllocator:
         if epoch.grants is not None:   # host fallback: applied at begin time
             return epoch.grants
         if self.state.mutation_count != epoch.guard:
+            # refusal path: the epoch's rng draws (RRR preperm prefix) must
+            # not leak into the stream — rewind so the caller can re-begin
+            # from a clean position instead of a wedged one.
+            if epoch.rng_state0 is not None:
+                self.rng.bit_generator.state = epoch.rng_state0
+            self.fault_stats.commit_refusals += 1
+            self._notify_fault("commit-refused")
             raise RuntimeError(
                 "cluster state mutated while an allocation epoch was in "
                 "flight; commit_epoch() must run before any other allocator "
                 "mutation")
+        if self.audit:
+            _invariants.check_view_agreement(self, epoch.view)
         if epoch.cached_seq is not None:   # epoch-cache hit: replay
-            return self._apply_seq(epoch.view, epoch.TD, epoch.cached_seq)
-        seq = epoch.handle.result()
+            grants = self._apply_seq(epoch.view, epoch.TD, epoch.cached_seq)
+        else:
+            grants = self._commit_fused(epoch)
+        if self.audit:
+            _invariants.assert_invariants(self)
+        return grants
+
+    # -- self-healing dispatch (core.faults) ---------------------------------
+
+    def _dispatch_fused(self, view, TD, per_agent_limit, shards, devices,
+                        preperms):
+        """Dispatch the fused device epoch, retrying transient failures with
+        capped exponential backoff (:class:`~repro.core.faults
+        .RecoveryPolicy`).  Returns the :class:`EpochHandle`, or ``None``
+        after retries are exhausted — the caller then self-heals on the
+        host engine.  Each attempt restores the rng to its own pre-attempt
+        position so a failed dispatch consumes no stream."""
+        from repro.core import engine_jax
+
+        pol = self.recovery
+        inj = self.fault_injector
+        for attempt in range(pol.max_retries + 1):
+            if attempt:
+                self.fault_stats.retries += 1
+                if pol.backoff_s > 0:
+                    _time.sleep(pol.backoff(attempt - 1))
+            state = self.rng.bit_generator.state
+            try:
+                if inj is not None and inj.take_dispatch_fault():
+                    raise inj.error("dispatch")
+                handle = engine_jax.run_epoch_async(
+                    self.crit, self.server_policy,
+                    X=view.X, D=view.D, C=view.C, FREE=view.FREE,
+                    phi=view.phi, allowed=view.allowed, wanted=view.wanted,
+                    true_demands=TD, per_agent_limit=per_agent_limit,
+                    lookahead=False, rng=self.rng, shards=shards,
+                    devices=devices, preperms=preperms,
+                )
+            except Exception as exc:
+                self.rng.bit_generator.state = state
+                self.fault_stats.dispatch_failures += 1
+                self._notify_fault("dispatch-error", error=repr(exc),
+                                   attempt=attempt)
+                continue
+            if attempt:
+                self.fault_stats.retry_successes += 1
+                self._notify_fault("retry-success", where="dispatch")
+            return handle
+        if self.device_health.on_failure():
+            self._notify_fault("quarantine",
+                               **self.device_health.counters())
+        self.fault_stats.host_fallbacks += 1
+        self._notify_fault("host-fallback", where="dispatch")
+        return None
+
+    def _commit_fused(self, epoch: InFlightEpoch) -> list[Grant]:
+        """Block on the device result and apply it; a failure (XLA error,
+        injected fault, timeout) enters :meth:`_recover_commit`."""
+        inj = self.fault_injector
+        try:
+            if inj is not None and inj.take_commit_fault():
+                raise inj.error("commit")
+            seq = epoch.handle.result()
+        except Exception as exc:
+            return self._recover_commit(epoch, exc)
+        if self.device_health.on_success():
+            self._notify_fault("probe-success",
+                               **self.device_health.counters())
         if epoch.cache_key is not None and self.epoch_cache is not None:
             self._cache_store_fused(epoch, seq)
         return self._apply_seq(epoch.view, epoch.TD, seq)
+
+    def _redispatch(self, epoch: InFlightEpoch):
+        """Re-dispatch a failed fused epoch from its frozen view.  The rng
+        was rewound to ``rng_state0`` first, so ``preperms=None`` makes the
+        engine re-draw the identical RRR prefix (``rrr_perm_budget`` is a
+        pure function of the profile) — the retry is a replay, not a new
+        sample."""
+        from repro.core import engine_jax
+
+        inj = self.fault_injector
+        if inj is not None and inj.take_dispatch_fault():
+            raise inj.error("dispatch")
+        view = epoch.view
+        return engine_jax.run_epoch_async(
+            self.crit, self.server_policy,
+            X=view.X, D=view.D, C=view.C, FREE=view.FREE,
+            phi=view.phi, allowed=view.allowed, wanted=view.wanted,
+            true_demands=epoch.TD, per_agent_limit=epoch.per_agent_limit,
+            lookahead=False, rng=self.rng, shards=epoch.shards,
+            devices=epoch.devices, preperms=None,
+        )
+
+    def _recover_commit(self, epoch: InFlightEpoch, exc) -> list[Grant]:
+        """Self-heal a failed fused commit.  Retries the device dispatch
+        with backoff (rng rewound before each, so every attempt replays the
+        same stream); once exhausted, quarantines the device path and
+        re-runs the HOST engine over the same frozen view — which, after
+        the rewind, draws the identical permutation stream and produces the
+        bit-identical grant sequence the device would have returned."""
+        pol = self.recovery
+        self.fault_stats.commit_failures += 1
+        self._notify_fault("commit-error", error=repr(exc))
+        for attempt in range(pol.max_retries):
+            self.fault_stats.retries += 1
+            if pol.backoff_s > 0:
+                _time.sleep(pol.backoff(attempt))
+            if epoch.rng_state0 is not None:
+                self.rng.bit_generator.state = epoch.rng_state0
+            try:
+                handle = self._redispatch(epoch)
+                seq = handle.result()
+            except Exception as exc2:
+                self.fault_stats.dispatch_failures += 1
+                self._notify_fault("dispatch-error", error=repr(exc2),
+                                   attempt=attempt + 1)
+                continue
+            epoch.handle = handle   # perms for _cache_store_fused
+            self.fault_stats.retry_successes += 1
+            self._notify_fault("retry-success", where="commit")
+            if self.device_health.on_success():
+                self._notify_fault("probe-success",
+                                   **self.device_health.counters())
+            if epoch.cache_key is not None and self.epoch_cache is not None:
+                self._cache_store_fused(epoch, seq)
+            return self._apply_seq(epoch.view, epoch.TD, seq)
+        if self.device_health.on_failure():
+            self._notify_fault("quarantine",
+                               **self.device_health.counters())
+        if epoch.rng_state0 is not None:
+            self.rng.bit_generator.state = epoch.rng_state0
+        self.fault_stats.host_fallbacks += 1
+        self._notify_fault("host-fallback", where="commit")
+        grants, _seq = self._allocate_batched_host(
+            epoch.per_agent_limit, epoch.tie, False, epoch.view, epoch.TD)
+        return grants   # host-run grants never populate the fused cache key
+
+    def abort_epoch(self, epoch: Optional[InFlightEpoch] = None) -> bool:
+        """Abandon an in-flight epoch without applying its grants.
+
+        Rewinds the allocator rng to its pre-epoch position (so the next
+        ``begin_epoch`` draws the stream the aborted one consumed) and
+        clears the in-flight slot; the epoch cache is untouched.  Returns
+        True if an epoch was aborted, False if there was nothing to abort.
+        Host epochs (grants applied eagerly at begin time) cannot be
+        aborted — their effects are already live."""
+        if epoch is None:
+            epoch = self._inflight_epoch
+        if epoch is None or epoch.consumed:
+            return False
+        if epoch.grants is not None:
+            raise RuntimeError("cannot abort a host epoch: its grants were "
+                               "applied at begin time")
+        epoch.consumed = True
+        if self._inflight_epoch is epoch:
+            self._inflight_epoch = None
+        if epoch.rng_state0 is not None:
+            self.rng.bit_generator.state = epoch.rng_state0
+        self.fault_stats.epoch_aborts += 1
+        self._notify_fault("epoch-abort")
+        return True
 
     def _allocate_batched_host(self, per_agent_limit, tie, kernel,
                                view, TD):

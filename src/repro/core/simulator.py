@@ -52,6 +52,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import faults as _faults
+from repro.core import invariants as _invariants
 from repro.core import metrics as _metrics
 from repro.core.online import OnlineAllocator
 from repro.core.workloads import (  # noqa: F401  (JobSpec re-exported: legacy API)
@@ -94,6 +96,13 @@ class SimConfig:
                                          # True | byte budget | EpochCache
                                          # (repro.core.epoch_cache; instances
                                          # may be shared across sims)
+    audit: bool = False                  # run the ledger invariant auditor
+                                         # (repro.core.invariants) after every
+                                         # epoch and every processed event
+    faults: object = None                # optional repro.core.faults.FaultPlan
+                                         # (chaos: crashes/restarts/flaps/racks
+                                         # /disconnects/device faults/cache
+                                         # corruption on the simulator clock)
     seed: int = 0
 
 
@@ -109,6 +118,9 @@ class SimResult:
     tasks_requeued_on_revoke: int = 0    # preemption: busy tasks requeued
     revoked_wasted_s: float = 0.0        # preemption: task-seconds thrown away
     cache_stats: Optional[dict] = None   # epoch-cache counters (None = no cache)
+    fault_stats: Optional[dict] = None   # chaos counters (None = no FaultPlan):
+                                         # sim-level churn counts + the
+                                         # allocator's fault/recovery counters
 
     def _series(self, col: int):
         return self.timeline[:, 0], self.timeline[:, col]
@@ -228,8 +240,25 @@ class SparkMesosSim:
             self.alloc.add_agent(name, cap)
         for t, name, cap in (agent_schedule or []):
             self._push(t, "agent_up", (name, cap))
+        # legacy permanent-death list: kept verbatim (same event kind, same
+        # heap order) so existing seeded traces are untouched; FaultPlan is
+        # the richer replacement (crash+restart, flaps, racks, disconnects).
         for t, name in (failures or []):
             self._push(t, "agent_down", name)
+
+        self.fault_plan = cfg.faults
+        self.fault_counts = {"agent_crashes": 0, "agent_restarts": 0,
+                             "fw_disconnects": 0, "fw_rejoins": 0,
+                             "cache_corruptions": 0}
+        self.alloc.audit = bool(cfg.audit)
+        self.alloc.fault_listeners.append(self._on_alloc_fault)
+        if self.fault_plan is not None:
+            # chaos rng is private to the harness — fault timing/selection
+            # must never perturb the allocator or workload streams.
+            self._fault_rng = np.random.default_rng(self.fault_plan.seed)
+            self.alloc.fault_injector = self.fault_plan.make_injector()
+            for t, ev in self.fault_plan.timed():
+                self._push(t, "fault", ev)
 
     # ------------------------------------------------------------------ util
 
@@ -347,7 +376,8 @@ class SparkMesosSim:
             if fid not in self.jobs:
                 self.alloc.set_wanted(fid, 0)
         for jid, job in self.jobs.items():
-            self.alloc.set_wanted(jid, self._wanted(job))
+            if jid in self.alloc.frameworks:   # disconnected drivers (chaos)
+                self.alloc.set_wanted(jid, self._wanted(job))
         if self.cfg.async_epochs:
             # dispatch only: the device epoch runs while the event loop
             # keeps moving; _commit_inflight applies the grants at the
@@ -380,6 +410,7 @@ class SparkMesosSim:
         if grants:
             self._mark_dirty()  # keep cycling while offers land (ramp-up)
         self._sample()
+        self._audit()
 
     def _commit_inflight(self):
         """Commit the in-flight epoch.  `self.now` still equals the
@@ -487,6 +518,79 @@ class SparkMesosSim:
                     self.n_requeued += 1
         self._mark_dirty()
 
+    # ---------------------------------------------------------------- chaos
+
+    def _on_alloc_fault(self, kind, info):
+        """Forward allocator fault/recovery notifications to the hooks."""
+        if kind in _faults.RECOVERY_KINDS:
+            for h in self.hooks:
+                h.on_recovery(self.now, kind, info)
+        else:
+            for h in self.hooks:
+                h.on_fault(self.now, kind, info)
+
+    def _on_fault(self, ev):
+        """Apply one timed FaultPlan event (module repro.core.faults)."""
+        if isinstance(ev, _faults.AgentCrash):
+            cap = self.alloc.agents.get(ev.agent)
+            if cap is None:
+                return
+            self.fault_counts["agent_crashes"] += 1
+            for h in self.hooks:
+                h.on_fault(self.now, "agent-crash", {"agent": ev.agent})
+            self._on_agent_down(ev.agent)
+            if ev.restart_after is not None:
+                self._push(self.now + ev.restart_after, "fault",
+                           _faults.AgentRestart(ev.agent, tuple(cap)))
+        elif isinstance(ev, _faults.AgentRestart):
+            if ev.agent in self.alloc.agents:
+                return   # flap overlap: already back up
+            self.fault_counts["agent_restarts"] += 1
+            self.alloc.add_agent(ev.agent, ev.capacity)
+            self._mark_dirty()
+            for h in self.hooks:
+                h.on_recovery(self.now, "agent-restart", {"agent": ev.agent})
+        elif isinstance(ev, _faults.FrameworkDisconnect):
+            job = self.jobs.get(ev.fid)
+            if job is None or ev.fid not in self.alloc.frameworks:
+                return
+            self.fault_counts["fw_disconnects"] += 1
+            for h in self.hooks:
+                h.on_fault(self.now, "fw-disconnect", {"fid": ev.fid})
+            # the driver vanishes: every running copy dies with it and its
+            # tasks requeue (restart-on-reregistration, paper §3.7 churn)
+            for tid, copies in list(job.running.items()):
+                del job.running[tid]
+                job.unlaunched.insert(0, tid)
+                self.n_requeued += 1
+            job.executors.clear()
+            job.idle = []
+            self.alloc.deregister(ev.fid)
+            self._mark_dirty()
+            if ev.rejoin_after is not None:
+                self._push(self.now + ev.rejoin_after, "fault",
+                           _faults.FrameworkRejoin(ev.fid))
+        elif isinstance(ev, _faults.FrameworkRejoin):
+            job = self.jobs.get(ev.fid)
+            if job is None or ev.fid in self.alloc.frameworks:
+                return
+            self.fault_counts["fw_rejoins"] += 1
+            self.alloc.register(ev.fid, demand=job.spec.demand,
+                                wanted_tasks=self._wanted(job))
+            self._mark_dirty()
+            for h in self.hooks:
+                h.on_recovery(self.now, "fw-rejoin", {"fid": ev.fid})
+        elif isinstance(ev, _faults.CacheCorruption):
+            cache = self.alloc.epoch_cache
+            if cache is not None and cache.corrupt_entry(self._fault_rng):
+                self.fault_counts["cache_corruptions"] += 1
+                for h in self.hooks:
+                    h.on_fault(self.now, "cache-corrupt", {})
+
+    def _audit(self):
+        if self.cfg.audit:
+            _invariants.assert_invariants(self.alloc)
+
     # ------------------------------------------------------------------ run
 
     def run(self, until: float = float("inf")) -> SimResult:
@@ -545,6 +649,9 @@ class SparkMesosSim:
                 self._mark_dirty()
             elif kind == "agent_down":
                 self._on_agent_down(payload)
+            elif kind == "fault":
+                self._on_fault(payload)
+            self._audit()
             if self._pending_arrivals == 0 and not self.jobs:
                 break
         if self._inflight is not None:   # loop ended mid-flight: commit now
@@ -565,6 +672,9 @@ class SparkMesosSim:
             revoked_wasted_s=self.revoked_wasted_s,
             cache_stats=(self.alloc.epoch_cache.stats()
                          if self.alloc.epoch_cache is not None else None),
+            fault_stats=(None if self.fault_plan is None
+                         else {**self.fault_counts,
+                               **self.alloc.fault_counters()}),
         )
 
 

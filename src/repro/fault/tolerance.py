@@ -37,21 +37,46 @@ class HostState:
     step_ema: Optional[float] = None
 
 
+class VirtualClock:
+    """A settable clock for driving the monitors on simulator virtual time.
+
+    Pass an instance as ``clock=`` (it is callable) and advance it from the
+    DES loop — or ignore it entirely and pass explicit ``now=`` timestamps
+    to :meth:`HeartbeatMonitor.beat` / :meth:`HeartbeatMonitor.failed_hosts`.
+    """
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+    def __call__(self) -> float:
+        return self.t
+
+
 class HeartbeatMonitor:
-    """Liveness tracking; a host silent for `timeout` is declared failed."""
+    """Liveness tracking; a host silent for `timeout` is declared failed.
+
+    ``clock`` defaults to wall time but accepts any zero-arg callable — a
+    :class:`VirtualClock` runs the monitor end-to-end on simulator virtual
+    time; every query also takes an explicit ``now=`` override for callers
+    that carry their own timestamps (the DES event loop's ``sim.now``)."""
 
     def __init__(self, n_hosts: int, timeout: float = 60.0, clock=time.monotonic):
         self.clock = clock
         self.timeout = timeout
         self.hosts = {h: HostState(h, clock()) for h in range(n_hosts)}
 
-    def beat(self, host_id: int):
-        self.hosts[host_id].last_heartbeat = self.clock()
+    def beat(self, host_id: int, now: Optional[float] = None):
+        self.hosts[host_id].last_heartbeat = (
+            self.clock() if now is None else float(now))
 
-    def failed_hosts(self) -> list:
-        now = self.clock()
+    def failed_hosts(self, now: Optional[float] = None) -> list:
+        t = self.clock() if now is None else float(now)
         return [h for h, st in self.hosts.items()
-                if now - st.last_heartbeat > self.timeout]
+                if t - st.last_heartbeat > self.timeout]
 
 
 class StragglerMonitor:

@@ -24,6 +24,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro.core import faults as _faults
 from repro.core import metrics as _metrics
 from repro.core.online import OnlineAllocator
 
@@ -41,6 +42,9 @@ class AllocRequest(NamedTuple):
     demand: tuple          # per-executor demand vector
     n_executors: int       # executors wanted
     phi: float = 1.0       # priority weight
+    deadline: Optional[float] = None   # absolute service-clock deadline;
+                                       # expired requests are dropped (and
+                                       # counted) instead of served late
 
 
 class AllocatorService:
@@ -53,28 +57,81 @@ class AllocatorService:
     framework's executors back (the steady-state release half that makes
     profiles recur).  The cache may be a shared
     :class:`~repro.core.epoch_cache.EpochCache` instance so many service
-    replicas serve from one profile table."""
+    replicas serve from one profile table.
+
+    Hardening (docs/robustness.md): ``max_queue`` bounds admission —
+    ``submit`` rejects with backpressure once full; per-request
+    ``deadline`` s are enforced at drain time (expired requests dropped,
+    never served late); a failed epoch is aborted (rng rewound) and
+    retried with capped backoff; :meth:`health` reports queue depth,
+    rejection/retry counters and the allocator's quarantine state, so a
+    load balancer can see a degraded-but-available replica."""
 
     def __init__(self, n_resources: int, agents: Sequence, *,
                  criterion="drf", server_policy: str = "pooled",
-                 epoch_cache=True, use_kernel="auto", seed: int = 0):
+                 epoch_cache=True, use_kernel="auto", seed: int = 0,
+                 max_queue: Optional[int] = None, max_retries: int = 2,
+                 backoff_s: float = 0.02, clock=time.monotonic,
+                 fault_injector=None, recovery=None):
         self.alloc = OnlineAllocator(
             n_resources, criterion=criterion, server_policy=server_policy,
-            seed=seed, epoch_cache=epoch_cache)
+            seed=seed, epoch_cache=epoch_cache,
+            fault_injector=fault_injector, recovery=recovery)
         for name, cap in agents:
             self.alloc.add_agent(name, cap)
         self.use_kernel = use_kernel
+        self.clock = clock
+        self.max_queue = max_queue
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
         self.latency = _metrics.LatencyStats()
         self.decisions = 0
         self.epochs = 0
+        self.rejected_backpressure = 0
+        self.rejected_deadline = 0
+        self.epoch_retries = 0
+        self.epoch_failures = 0
         self._queue: list[AllocRequest] = []
 
-    def submit(self, req: AllocRequest) -> None:
+    def submit(self, req: AllocRequest) -> bool:
+        """Admit a request; False = rejected (bounded queue backpressure)."""
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.rejected_backpressure += 1
+            return False
         self._queue.append(req)
+        return True
+
+    def _run_epoch_with_retry(self) -> list:
+        """One epoch through begin/commit; on failure abort the in-flight
+        epoch (rng rewound — the retry re-draws the same stream) and retry
+        with backoff.  The allocator's own self-healing (device retries,
+        host fallback, quarantine) runs underneath; this layer only covers
+        errors that escape it."""
+        last = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self.epoch_retries += 1
+                if self.backoff_s > 0:
+                    time.sleep(min(self.backoff_s * 2 ** (attempt - 1), 1.0))
+            try:
+                return self.alloc.commit_epoch(
+                    self.alloc.begin_epoch(use_kernel=self.use_kernel))
+            except Exception as exc:
+                self.alloc.abort_epoch()
+                last = exc
+        self.epoch_failures += 1
+        raise last
 
     def drain_epoch(self) -> list:
         """Apply queued requests, run one (cached) epoch, return grants."""
+        now = self.clock()
+        live = []
         for req in self._queue:
+            if req.deadline is not None and now > req.deadline:
+                self.rejected_deadline += 1
+                continue
+            live.append(req)
+        for req in live:
             fw = self.alloc.frameworks.get(req.fid)
             if fw is None:
                 self.alloc.register(req.fid, demand=req.demand,
@@ -85,8 +142,7 @@ class AllocatorService:
                     req.fid, fw.wanted_tasks + req.n_executors)
         self._queue.clear()
         t0 = time.perf_counter()
-        grants = self.alloc.commit_epoch(
-            self.alloc.begin_epoch(use_kernel=self.use_kernel))
+        grants = self._run_epoch_with_retry()
         dt = time.perf_counter() - t0
         self.latency.record(dt, max(len(grants), 1))
         self.decisions += len(grants)
@@ -104,6 +160,21 @@ class AllocatorService:
                 self.alloc.release_executor(fid, agent)
         self.alloc.deregister(fid)
 
+    def health(self) -> dict:
+        """Liveness/degradation endpoint: ``status`` is ``"degraded"``
+        while the device path is quarantined (serving continues on the
+        host engine), ``"ok"`` otherwise."""
+        return {
+            "status": ("degraded" if self.alloc.device_health.quarantined
+                       else "ok"),
+            "queue_depth": len(self._queue),
+            "rejected_backpressure": self.rejected_backpressure,
+            "rejected_deadline": self.rejected_deadline,
+            "epoch_retries": self.epoch_retries,
+            "epoch_failures": self.epoch_failures,
+            "faults": self.alloc.fault_counters(),
+        }
+
     def stats(self) -> dict:
         cache = self.alloc.epoch_cache
         return {
@@ -111,6 +182,7 @@ class AllocatorService:
             "decisions": self.decisions,
             "latency": self.latency.summary(),
             "cache": cache.stats() if cache is not None else None,
+            "health": self.health(),
         }
 
 
@@ -159,12 +231,23 @@ def drive(service: AllocatorService, profiles: list, rounds: int) -> dict:
 def serve(n_agents: int = 64, n_frameworks: int = 40, n_profiles: int = 4,
           rounds: int = 64, criterion: str = "drf",
           server_policy: str = "pooled", use_kernel="auto",
-          epoch_cache=True, seed: int = 0) -> dict:
+          epoch_cache=True, seed: int = 0,
+          inject_faults: bool = False) -> dict:
     agents = [(f"a{j}", _AGENT_TYPES[j % len(_AGENT_TYPES)])
               for j in range(n_agents)]
+    injector = recovery = None
+    if inject_faults:
+        # chaos serve: force the fused path, fail its first dispatches, and
+        # quarantine quickly — proves degraded-mode serving stays available
+        # (host fallback) and the health endpoint reports it (CI chaos job).
+        use_kernel = "fused"
+        injector = _faults.EngineFaultInjector(fail_dispatches=6, seed=seed)
+        recovery = _faults.RecoveryPolicy(max_retries=0, backoff_s=0.0,
+                                          quarantine_after=2, probe_every=4)
     service = AllocatorService(
         2, agents, criterion=criterion, server_policy=server_policy,
-        epoch_cache=epoch_cache, use_kernel=use_kernel, seed=seed)
+        epoch_cache=epoch_cache, use_kernel=use_kernel, seed=seed,
+        fault_injector=injector, recovery=recovery)
     profiles = make_profiles(n_profiles, n_frameworks, seed=seed)
     out = drive(service, profiles, rounds)
     out["config"] = {
@@ -172,6 +255,7 @@ def serve(n_agents: int = 64, n_frameworks: int = 40, n_profiles: int = 4,
         "n_profiles": n_profiles, "rounds": rounds, "criterion": criterion,
         "server_policy": server_policy, "use_kernel": str(use_kernel),
         "epoch_cache": bool(epoch_cache), "seed": seed,
+        "inject_faults": bool(inject_faults),
     }
     return out
 
@@ -190,6 +274,11 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                     help="serve without the epoch cache (baseline)")
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + cache-effectiveness assert")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="chaos serve: fused path with injected dispatch "
+                         "failures; with --smoke asserts degraded-mode "
+                         "serving stays available (host fallback + "
+                         "quarantine reported by the health endpoint)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write stats JSON here")
     args = ap.parse_args(argv)
@@ -201,8 +290,24 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                 n_profiles=args.profiles, rounds=args.rounds,
                 criterion=args.criterion, server_policy=args.policy,
                 use_kernel=args.kernel, epoch_cache=not args.no_cache,
-                seed=args.seed)
-    if args.smoke and not args.no_cache:
+                seed=args.seed, inject_faults=args.inject_faults)
+    if args.smoke and args.inject_faults:
+        health = out["health"]
+        faults = health["faults"]
+        # degraded-mode availability: every round still served an epoch,
+        # decisions flowed, and the failure actually exercised the fallback
+        assert out["epochs"] == args.rounds, \
+            f"chaos smoke: served {out['epochs']}/{args.rounds} epochs"
+        assert out["decisions"] > 0, "chaos smoke: no decisions served"
+        assert faults["host_fallbacks"] >= 1, \
+            f"chaos smoke: host fallback never fired ({faults})"
+        assert faults["quarantines"] >= 1, \
+            f"chaos smoke: device path never quarantined ({faults})"
+        print(f"chaos smoke OK: status={health['status']} "
+              f"fallbacks={faults['host_fallbacks']} "
+              f"quarantines={faults['quarantines']} "
+              f"decisions={out['decisions']}")
+    elif args.smoke and not args.no_cache:
         cache = out["cache"]
         # every round past the first profile cycle must replay from cache
         expect = args.rounds - args.profiles

@@ -1,0 +1,147 @@
+"""Unit tests for repro.fault.tolerance: heartbeat liveness, straggler
+EMA flagging, and elastic rescale planning — including the simulator
+virtual-time path (VirtualClock / explicit ``now=`` timestamps)."""
+from __future__ import annotations
+
+from repro.fault.tolerance import (
+    ElasticController,
+    HeartbeatMonitor,
+    RescalePlan,
+    StragglerMonitor,
+    VirtualClock,
+)
+
+
+# ---------------------------------------------------------------------------
+# VirtualClock + HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock():
+    clk = VirtualClock()
+    assert clk() == 0.0
+    assert clk.advance(2.5) == 2.5
+    clk.t = 10.0
+    assert clk() == 10.0
+
+
+def test_heartbeat_virtual_time_end_to_end():
+    clk = VirtualClock()
+    mon = HeartbeatMonitor(3, timeout=5.0, clock=clk)
+    assert mon.failed_hosts() == []
+    clk.advance(4.0)
+    mon.beat(0)                      # host 0 beats at t=4
+    clk.advance(3.0)                 # t=7: hosts 1,2 silent for 7 > 5
+    assert mon.failed_hosts() == [1, 2]
+    mon.beat(1)
+    mon.beat(2)
+    assert mon.failed_hosts() == []
+    clk.advance(4.5)                 # t=11.5: host 0 silent for 7.5, 1/2 for 4.5
+    assert mon.failed_hosts() == [0]
+
+
+def test_heartbeat_explicit_now_overrides_clock():
+    # wall clock never consulted when every call carries its own timestamp
+    mon = HeartbeatMonitor(2, timeout=10.0, clock=lambda: 0.0)
+    mon.beat(0, now=100.0)
+    mon.beat(1, now=103.0)
+    assert mon.failed_hosts(now=112.0) == [0]
+    assert mon.failed_hosts(now=114.0) == [0, 1]
+    assert mon.failed_hosts(now=105.0) == []
+
+
+def test_heartbeat_boundary_is_strict():
+    clk = VirtualClock()
+    mon = HeartbeatMonitor(1, timeout=5.0, clock=clk)
+    clk.advance(5.0)
+    assert mon.failed_hosts() == []      # exactly timeout: still alive
+    clk.advance(0.001)
+    assert mon.failed_hosts() == [0]
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_chronic_slow_host():
+    mon = StragglerMonitor(4, alpha=0.5, threshold=1.5, min_steps=3)
+    for _ in range(5):
+        for h in range(3):
+            mon.record(h, 1.0)
+        mon.record(3, 10.0)
+    assert mon.stragglers() == [3]
+
+
+def test_straggler_min_steps_gate():
+    mon = StragglerMonitor(4, min_steps=5)
+    for _ in range(4):                   # one step short of the gate
+        for h in range(3):
+            mon.record(h, 1.0)
+        mon.record(3, 10.0)
+    assert mon.stragglers() == []
+
+
+def test_straggler_needs_three_qualifying_hosts():
+    # with < 3 qualifying EMAs the median is meaningless: no flags
+    mon = StragglerMonitor(2, min_steps=1)
+    mon.record(0, 1.0)
+    mon.record(1, 50.0)
+    assert mon.stragglers() == []
+
+
+def test_straggler_ema_forgives_a_single_spike():
+    mon = StragglerMonitor(4, alpha=0.2, threshold=1.5, min_steps=3)
+    for h in range(4):
+        for _ in range(10):
+            mon.record(h, 1.0)
+    mon.record(3, 4.0)                   # one bad step, EMA ~1.6 -> 1.48
+    mon.record(3, 1.0)
+    assert mon.stragglers() == []
+
+
+# ---------------------------------------------------------------------------
+# ElasticController
+# ---------------------------------------------------------------------------
+
+def _controller(clk, n=4, timeout=5.0):
+    hb = HeartbeatMonitor(n, timeout=timeout, clock=clk)
+    st = StragglerMonitor(n, min_steps=1)
+    return hb, st, ElasticController(hb, st, latest_step=lambda: 42)
+
+
+def test_plan_none_when_membership_unchanged():
+    clk = VirtualClock()
+    _hb, _st, ctl = _controller(clk)
+    assert ctl.plan(current_hosts=4) is None
+
+
+def test_plan_on_virtual_time_failure_and_scale_up():
+    clk = VirtualClock()
+    hb, st, ctl = _controller(clk)
+    clk.advance(6.0)                     # all hosts silent past timeout
+    hb.beat(1)
+    hb.beat(2)
+    hb.beat(3)
+    plan = ctl.plan(current_hosts=4, offered_hosts=2)
+    assert isinstance(plan, RescalePlan)
+    assert (plan.old_hosts, plan.new_hosts) == (4, 5)   # -1 failed, +2
+    assert plan.restore_step == 42
+    assert "failed=[0]" in plan.reason
+    assert "scale_up=+2" in plan.reason
+
+
+def test_plan_combines_failures_and_stragglers():
+    clk = VirtualClock()
+    hb, st, ctl = _controller(clk)
+    clk.advance(6.0)
+    hb.beat(0)
+    hb.beat(1)
+    hb.beat(2)                           # host 3 failed
+    for h in (0, 1, 2):
+        st.record(h, 1.0)
+    st.record(2, 1.0)                    # host 2 fine
+    st.record(0, 1.0)
+    st.record(1, 9.0)                    # host 1 chronic straggler
+    plan = ctl.plan(current_hosts=4)
+    assert plan.new_hosts == 2
+    assert "stragglers=[1]" in plan.reason
+    assert "failed=[3]" in plan.reason
