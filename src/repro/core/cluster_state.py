@@ -263,6 +263,52 @@ class ClusterState:
         self.wanted[n] = float(wanted)
         self.mutation_count += 1
 
+    # -- durability (repro.core.journal) --------------------------------------
+
+    def to_payload(self) -> dict:
+        """Bit-exact serialization for checkpoints (journal.py snapshots).
+
+        Raw array copies, NOT a re-derivable summary: restoring must not
+        re-run any float accumulation (grant/release order changes the
+        rounding), so every ledger array ships verbatim, along with the
+        slot maps, free-slot recycling stacks and version counters that
+        make future slot assignment deterministic."""
+        return {
+            "R": self.R, "nf": self._nf, "na": self._na,
+            "X": self.X.copy(), "Xr": self.Xr.copy(), "D": self.D.copy(),
+            "C": self.C.copy(), "FREE": self.FREE.copy(),
+            "phi": self.phi.copy(), "allowed": self.allowed.copy(),
+            "wanted": self.wanted.copy(), "fw_active": self.fw_active.copy(),
+            "agent_active": self.agent_active.copy(),
+            "fid2slot": dict(self.fid2slot),
+            "agent2slot": dict(self.agent2slot),
+            "free_fw_slots": list(self._free_fw_slots),
+            "free_agent_slots": list(self._free_agent_slots),
+            "fw_allowed_names": {
+                n: (None if v is None else sorted(v))
+                for n, v in self._fw_allowed_names.items()},
+            "version": self._version,
+            "mutation_count": self.mutation_count,
+        }
+
+    @classmethod
+    def from_payload(cls, p: dict) -> "ClusterState":
+        """Rebuild a :meth:`to_payload` checkpoint (array-identical)."""
+        st = cls(p["R"], fw_capacity=p["nf"], agent_capacity=p["na"])
+        for name in ("X", "Xr", "D", "C", "FREE", "phi", "allowed",
+                     "wanted", "fw_active", "agent_active"):
+            setattr(st, name, np.array(p[name]))
+        st.fid2slot = dict(p["fid2slot"])
+        st.agent2slot = dict(p["agent2slot"])
+        st._free_fw_slots = list(p["free_fw_slots"])
+        st._free_agent_slots = list(p["free_agent_slots"])
+        st._fw_allowed_names = {
+            n: (None if v is None else frozenset(v))
+            for n, v in p["fw_allowed_names"].items()}
+        st._version = int(p["version"])
+        st.mutation_count = int(p["mutation_count"])
+        return st
+
     # -- views ----------------------------------------------------------------
 
     def _orders(self):

@@ -52,11 +52,24 @@ live framework state outside the frozen view.
 Eviction & telemetry
 --------------------
 Entries live in an LRU ordered by last use and bounded by a byte budget
-(``max_bytes``); stores that push past the budget evict from the cold end.
-``hits / misses / stores / evictions`` counters (and ``hit_rate``) are
-exposed via :meth:`EpochCache.stats` — surfaced per simulation cell in
-``benchmarks/scenario_sweep.py`` and per serve run in
+(``max_bytes``); stores that push past the budget evict from the cold end,
+with a recurrence-aware twist: the victim is the LEAST-HIT entry among the
+``EVICT_WINDOW`` coldest (ties by recency, i.e. plain LRU), so a burst of
+once-seen profiles cannot push out a hot recurring one that briefly aged
+to the cold end.  ``hits / misses / stores / evictions`` counters (and
+``hit_rate``) are exposed via :meth:`EpochCache.stats` — surfaced per
+simulation cell in ``benchmarks/scenario_sweep.py`` and per serve run in
 ``repro.launch.alloc_serve``.
+
+Persistence
+-----------
+:meth:`EpochCache.save` spills the entry table to a CRC-framed file
+(atomic temp + rename) and :meth:`EpochCache.load` warms a cache from one:
+every entry re-verifies its ``seq_digest`` on load, and corrupt,
+unpicklable, digest-less or digest-mismatched entries are dropped and
+counted (``load_dropped``) — a damaged spill degrades to a colder cache,
+never to serving garbage.  The serve front-end's ``--state-dir`` warm
+restart is built on this pair.
 
 A single :class:`EpochCache` may be shared by many allocators (the serving
 front-end's repeat-profile hits come from exactly that): it holds no
@@ -65,6 +78,10 @@ allocator state, only profile -> outcome mappings.
 from __future__ import annotations
 
 import hashlib
+import os
+import pickle
+import struct
+import zlib
 from collections import OrderedDict
 from typing import NamedTuple, Optional
 
@@ -72,6 +89,14 @@ import numpy as np
 
 #: default LRU byte budget (~32 MiB holds ~10^5 hundred-grant outcomes)
 DEFAULT_MAX_BYTES = 32 << 20
+
+#: eviction candidate window: the victim is the least-hit of this many
+#: entries at the cold end (ties fall back to plain LRU order)
+EVICT_WINDOW = 4
+
+#: spill-file header ("1" = format version; foreign headers load nothing)
+_SPILL_MAGIC = b"RPROEPC1"
+_FRAME = struct.Struct("<II")
 
 _DIGEST_SIZE = 20
 
@@ -154,12 +179,16 @@ class EpochCache:
     def __init__(self, max_bytes: int = DEFAULT_MAX_BYTES):
         self.max_bytes = int(max_bytes)
         self._entries: OrderedDict[bytes, EpochOutcome] = OrderedDict()
+        self._hits_by_key: dict[bytes, int] = {}
         self.bytes = 0
         self.hits = 0
         self.misses = 0
         self.stores = 0
         self.evictions = 0
         self.corruption_evictions = 0
+        self.spills = 0
+        self.loads = 0
+        self.load_dropped = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -212,6 +241,7 @@ class EpochCache:
             return None
         self._entries.move_to_end(key)
         self.hits += 1
+        self._hits_by_key[key] = self._hits_by_key.get(key, 0) + 1
         return out
 
     def unhit(self, key: bytes) -> None:
@@ -225,11 +255,28 @@ class EpochCache:
         if old is not None:
             self.bytes -= old.nbytes + len(key)
         self._entries[key] = outcome
+        self._hits_by_key.setdefault(key, 0)
         self.bytes += outcome.nbytes + len(key)
         self.stores += 1
+        self._evict_to_budget()
+
+    def _evict_to_budget(self) -> None:
+        """Evict until under budget: the LEAST-HIT entry among the
+        ``EVICT_WINDOW`` coldest (``min`` is stable, so all-equal hit
+        counts degrade to plain LRU).  The window excludes the hottest
+        entry so the entry just stored can never evict itself while a
+        colder candidate exists."""
         while self.bytes > self.max_bytes and len(self._entries) > 1:
-            k, v = self._entries.popitem(last=False)
-            self.bytes -= v.nbytes + len(k)
+            width = min(EVICT_WINDOW, len(self._entries) - 1)
+            cand = []
+            for k in self._entries:
+                cand.append(k)
+                if len(cand) >= width:
+                    break
+            victim = min(cand, key=lambda k: self._hits_by_key.get(k, 0))
+            out = self._entries.pop(victim)
+            self._hits_by_key.pop(victim, None)
+            self.bytes -= out.nbytes + len(victim)
             self.evictions += 1
 
     def evict_corrupt(self, key: bytes) -> None:
@@ -239,6 +286,7 @@ class EpochCache:
         out = self._entries.pop(key, None)
         if out is not None:
             self.bytes -= out.nbytes + len(key)
+        self._hits_by_key.pop(key, None)
         self.corruption_evictions += 1
         self.unhit(key)
 
@@ -261,7 +309,80 @@ class EpochCache:
 
     def clear(self) -> None:
         self._entries.clear()
+        self._hits_by_key.clear()
         self.bytes = 0
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> int:
+        """Spill the entry table to ``path`` (CRC-framed entries, coldest
+        first so a truncated load preserves the hottest tail; atomic temp +
+        rename so a crash mid-spill leaves the previous file intact).
+        Returns the number of entries written."""
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(_SPILL_MAGIC)
+            for key, out in self._entries.items():
+                blob = pickle.dumps(
+                    (key, tuple(out), self._hits_by_key.get(key, 0)),
+                    protocol=4)
+                f.write(_FRAME.pack(len(blob), zlib.crc32(blob)))
+                f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        self.spills += 1
+        return len(self._entries)
+
+    def load(self, path: str) -> dict:
+        """Warm this cache from a spill file, verifying every entry.
+
+        Entries failing the CRC, unpicklable, carrying no ``seq_digest``,
+        or whose sequence contradicts its digest are dropped and counted
+        (never served); scanning continues past a bad frame, so one rotten
+        entry costs one entry, not the file.  Keys already live in this
+        cache win over spilled ones.  Returns
+        ``{"loaded", "dropped", "torn_bytes"}``."""
+        result = {"loaded": 0, "dropped": 0, "torn_bytes": 0}
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError:
+            return result
+        if not data.startswith(_SPILL_MAGIC):
+            return result
+        off = len(_SPILL_MAGIC)
+        while off + _FRAME.size <= len(data):
+            ln, crc = _FRAME.unpack_from(data, off)
+            end = off + _FRAME.size + ln
+            if end > len(data):
+                break                     # partial final frame: torn tail
+            blob = data[off + _FRAME.size:end]
+            off = end
+            if zlib.crc32(blob) != crc:
+                result["dropped"] += 1
+                continue
+            try:
+                key, out_t, hit_count = pickle.loads(blob)
+                out = EpochOutcome(*out_t)
+            except Exception:
+                result["dropped"] += 1
+                continue
+            if (not out.seq_digest
+                    or seq_digest_of(out.seq) != out.seq_digest):
+                result["dropped"] += 1
+                continue
+            if key in self._entries:
+                continue
+            self._entries[key] = out
+            self._hits_by_key[key] = int(hit_count)
+            self.bytes += out.nbytes + len(key)
+            result["loaded"] += 1
+        result["torn_bytes"] = len(data) - off
+        self._evict_to_budget()
+        self.loads += 1
+        self.load_dropped += result["dropped"]
+        return result
 
     # -- telemetry -----------------------------------------------------------
 
@@ -276,6 +397,8 @@ class EpochCache:
             "hit_rate": self.hit_rate,
             "stores": self.stores, "evictions": self.evictions,
             "corruption_evictions": self.corruption_evictions,
+            "spills": self.spills, "loads": self.loads,
+            "load_dropped": self.load_dropped,
             "entries": len(self._entries),
             "bytes": self.bytes, "max_bytes": self.max_bytes,
         }

@@ -104,6 +104,14 @@ class FaultStats:
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def restore(self, d: dict) -> None:
+        """Overwrite counters from an :meth:`as_dict` payload (journal
+        recovery); unknown keys are ignored so old journals keep replaying
+        after new counters are added."""
+        for k, v in d.items():
+            if hasattr(self, k):
+                setattr(self, k, int(v))
+
 
 class DeviceHealth:
     """Consecutive-failure tracking and quarantine of the device path.
@@ -164,6 +172,23 @@ class DeviceHealth:
             "probes": self.probes,
             "probe_successes": self.probe_successes,
         }
+
+    def state_dict(self) -> dict:
+        """Full durable state: :meth:`counters` plus the probe-cadence tick
+        (so a recovered quarantine probes on the same schedule)."""
+        out = self.counters()
+        out["probe_tick"] = self._probe_tick
+        return out
+
+    def restore(self, d: dict) -> None:
+        """Overwrite state from a :meth:`state_dict` payload (recovery);
+        the quarantine_after/probe_every CONFIG stays the constructor's."""
+        self.quarantined = bool(d["quarantined"])
+        self.consecutive_failures = int(d["consecutive_failures"])
+        self.quarantines = int(d["quarantines"])
+        self.probes = int(d["probes"])
+        self.probe_successes = int(d["probe_successes"])
+        self._probe_tick = int(d.get("probe_tick", 0))
 
 
 # ---------------------------------------------------------------------------

@@ -193,6 +193,64 @@ def assert_invariants(al, *, atol: float = 1e-6) -> None:
         raise InvariantViolation("; ".join(head) + more)
 
 
+def recovery_parity(ref, rec) -> list:
+    """Bit-for-bit parity check between a reference allocator and one
+    recovered from its journal/snapshot (docs/robustness.md, Durability).
+
+    Exact equality, no tolerances: recovery replays the original float
+    operations in the original order from the original arrays, so any
+    drift at all means the journal replayed something the live run never
+    did.  Returns human-readable mismatches (empty = bit-identical);
+    :func:`assert_recovery_parity` raises instead."""
+    errs: list = []
+    v1, v2 = ref.state.sorted_view(), rec.state.sorted_view()
+    if v1.fids != v2.fids:
+        errs.append(f"framework membership: {v1.fids} vs {v2.fids}")
+    if v1.agents != v2.agents:
+        errs.append(f"agent membership: {v1.agents} vs {v2.agents}")
+    if errs:
+        return errs
+    for name in ("X", "Xr", "D", "C", "FREE", "phi", "allowed", "wanted"):
+        a, b = getattr(v1, name), getattr(v2, name)
+        if (a is None) != (b is None) or (
+                a is not None and not np.array_equal(a, b)):
+            errs.append(f"ledger array {name} differs")
+    for fid in ref.frameworks:
+        f1, f2 = ref.frameworks[fid], rec.frameworks.get(fid)
+        if f2 is None:
+            continue   # membership mismatch already reported above
+        if not np.array_equal(f1.usage, f2.usage):
+            errs.append(f"{fid!r} usage differs")
+        if (f1.demand is None) != (f2.demand is None) or (
+                f1.demand is not None
+                and not np.array_equal(f1.demand, f2.demand)):
+            errs.append(f"{fid!r} demand differs")
+        if f1.wanted_tasks != f2.wanted_tasks or f1.phi != f2.phi:
+            errs.append(f"{fid!r} wanted/phi differs")
+        if f1.grants != f2.grants:
+            errs.append(f"{fid!r} grant count {f1.grants} vs {f2.grants}")
+        if sorted(f1.revocable.items()) != sorted(f2.revocable.items()):
+            errs.append(f"{fid!r} revocable ledger differs")
+        for agent in set(f1.tasks) | set(f2.tasks):
+            b1 = f1.tasks.get(agent, [])
+            b2 = f2.tasks.get(agent, [])
+            if len(b1) != len(b2) or any(
+                    not np.array_equal(x, y) for x, y in zip(b1, b2)):
+                errs.append(f"{fid!r} bundles on {agent!r} differ")
+                break
+    if ref.rng.bit_generator.state != rec.rng.bit_generator.state:
+        errs.append("rng stream position differs")
+    return errs
+
+
+def assert_recovery_parity(ref, rec) -> None:
+    """Raise :class:`InvariantViolation` unless ``rec`` is bit-identical
+    to ``ref`` (see :func:`recovery_parity`)."""
+    errs = recovery_parity(ref, rec)
+    if errs:
+        raise InvariantViolation("recovery parity: " + "; ".join(errs[:20]))
+
+
 def check_view_agreement(al, view, *, atol: float = 0.0) -> None:
     """Prove a frozen epoch view still equals the live state (commit time).
 

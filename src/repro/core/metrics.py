@@ -367,6 +367,38 @@ class CacheStatsHook(SimHook):
         return dict(self.cache.stats())
 
 
+class JournalStatsHook(SimHook):
+    """Durability telemetry: final journal counters plus the fsync-lag
+    trajectory (records appended since the last fsync / snapshot — the
+    window a power loss could lose, what the serve health endpoint
+    alerts on).
+
+    Reads ``sim.alloc.journal`` at start — inert (empty summary) when the
+    allocator runs without a journal, so wiring the hook unconditionally
+    costs nothing."""
+
+    def __init__(self):
+        self.journal = None
+        self.t: list = []
+        self.fsync_lag: list = []
+        self.snapshot_lag: list = []
+
+    def on_start(self, sim) -> None:
+        self.journal = getattr(sim.alloc, "journal", None)
+
+    def on_sample(self, sample: Sample) -> None:
+        if self.journal is None:
+            return
+        self.t.append(sample.t)
+        self.fsync_lag.append(self.journal.records_since_fsync)
+        self.snapshot_lag.append(self.journal.records_since_snapshot)
+
+    def summary(self) -> dict:
+        if self.journal is None:
+            return {}
+        return dict(self.journal.counters())
+
+
 class SlowdownHook(SimHook):
     """Per-group job slowdowns (observed duration / perfectly-parallel ideal)."""
 

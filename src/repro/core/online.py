@@ -78,6 +78,7 @@ from repro.core import criteria
 from repro.core import epoch_cache as _epoch_cache
 from repro.core import faults as _faults
 from repro.core import invariants as _invariants
+from repro.core import journal as _journal
 from repro.core import preemption as _preemption
 from repro.core.cluster_state import ClusterState, StateView
 from repro.core.engine import (
@@ -241,21 +242,163 @@ class OnlineAllocator:
         self.fault_listeners: list = []
         #: run the ledger invariant auditor after every epoch (chaos mode)
         self.audit = bool(audit)
+        #: attached write-ahead journal (repro.core.journal; None = off).
+        #: Attach BEFORE adding agents/frameworks, or pair the attachment
+        #: with a snapshot — replay starts from what the journal (or its
+        #: covering snapshot) saw, never from mid-history.
+        self.journal: Optional[_journal.Journal] = None
 
     # -- fault/recovery surface (repro.core.faults) --------------------------
 
     def _notify_fault(self, kind: str, **info) -> None:
         for cb in self.fault_listeners:
             cb(kind, info)
+        if self.journal is not None:
+            # fault/quarantine transitions are durable: recovery restores
+            # the counters and quarantine state the crashed process held.
+            self.journal.append({
+                "t": _journal.FAULT_STATE, "kind": kind,
+                "fault": self.fault_stats.as_dict(),
+                "health": self.device_health.state_dict()})
 
     def fault_counters(self) -> dict:
         """Merged fault/recovery counters: FaultStats + device health +
         (when installed) the injector's injection counts."""
         out = self.fault_stats.as_dict()
+        out["epochs_aborted"] = self.fault_stats.epoch_aborts
         out.update(self.device_health.counters())
         if self.fault_injector is not None:
             out.update(self.fault_injector.counters())
         return out
+
+    # -- durability (repro.core.journal) -------------------------------------
+
+    def _journal_rec(self, rec: dict) -> None:
+        if self.journal is not None:
+            self.journal.append(rec)
+
+    def _journal_begin(self, engine: str, per_agent_limit, rng_state0,
+                       view=None, TD=None, tie: str = "low") -> None:
+        """Open an epoch bracket in the journal: the PR-7 frozen-view
+        fingerprint (b"" for the per-grant path, which has no frozen view)
+        plus the pre-draw rng state recovery rewinds to if this epoch never
+        commits."""
+        if self.journal is None:
+            return
+        fp = b""
+        if view is not None:
+            fp = _epoch_cache.EpochCache.fingerprint(
+                view, TD, criterion=self.criterion,
+                policy=self.server_policy, mode=self.mode, tie=tie,
+                engine=engine, per_agent_limit=per_agent_limit,
+                bf_metric=self.bf_metric)
+        self.journal.append({
+            "t": _journal.EPOCH_BEGIN, "engine": engine, "fp": fp,
+            "pal": per_agent_limit, "rng_state0": rng_state0})
+
+    def _journal_commit(self, grants: list) -> None:
+        """Close the open epoch bracket: grant-sequence digest (recovery
+        cross-checks it against the replayed grant records), the POST-epoch
+        rng state (replay fast-forwards instead of re-drawing) and the
+        final fault/quarantine counters."""
+        if self.journal is None:
+            return
+        self.journal.append({
+            "t": _journal.EPOCH_COMMIT,
+            "rng_state": self.rng.bit_generator.state,
+            "n_grants": len(grants),
+            "seq_digest": _journal.grant_digest(
+                (g.fid, g.agent) for g in grants),
+            "fault": self.fault_stats.as_dict(),
+            "health": self.device_health.state_dict()})
+
+    def _journal_abort(self) -> None:
+        """Close the open epoch bracket as aborted (rng already rewound)."""
+        if self.journal is None:
+            return
+        self.journal.append({
+            "t": _journal.EPOCH_ABORT,
+            "rng_state": self.rng.bit_generator.state,
+            "fault": self.fault_stats.as_dict(),
+            "health": self.device_health.state_dict()})
+
+    def checkpoint(self) -> dict:
+        """Serialize the full allocator state for bit-exact restore.
+
+        Raw ledger arrays (ClusterState payload), per-framework bundle
+        ledgers, the rng state and the fault/quarantine counters — nothing
+        is re-derived at restore time, so no float accumulation reruns (see
+        the journal module docstring).  Refused while an epoch is in
+        flight: commit or abort it first (the snapshot would otherwise
+        capture rng draws whose epoch never happened)."""
+        if self._inflight_epoch is not None:
+            raise RuntimeError("cannot checkpoint with an epoch in flight; "
+                               "commit_epoch() or abort_epoch() it first")
+        fws = {}
+        for fid, fw in self.frameworks.items():
+            fws[fid] = {
+                "demand": None if fw.demand is None else fw.demand.copy(),
+                "wanted_tasks": fw.wanted_tasks,
+                "usage": fw.usage.copy(),
+                "tasks": {a: [b.copy() for b in bs]
+                          for a, bs in fw.tasks.items()},
+                "slack": {a: s.copy() for a, s in fw.slack.items()},
+                "grants": fw.grants,
+                "phi": fw.phi,
+                "allowed_agents": (None if fw.allowed_agents is None
+                                   else sorted(fw.allowed_agents)),
+                "revocable": dict(fw.revocable),
+            }
+        return {
+            "format": "alloc-ckpt-v1",
+            "R": self.R, "criterion": self.criterion,
+            "server_policy": self.server_policy, "mode": self.mode,
+            "bf_metric": self.bf_metric,
+            "rng_state": self.rng.bit_generator.state,
+            "state": self.state.to_payload(),
+            "frameworks": fws,
+            "fault": self.fault_stats.as_dict(),
+            "health": self.device_health.state_dict(),
+        }
+
+    def restore(self, payload: dict) -> None:
+        """Overwrite this allocator's state from a :meth:`checkpoint`.
+
+        The allocator must have been constructed with the identical
+        configuration — restoring a checkpoint into a different criterion/
+        policy/mode would silently change every future grant, so a
+        mismatch raises instead."""
+        if payload.get("format") != "alloc-ckpt-v1":
+            raise ValueError(f"unknown checkpoint format "
+                             f"{payload.get('format')!r}")
+        for k in ("R", "criterion", "server_policy", "mode", "bf_metric"):
+            if payload[k] != getattr(self, k):
+                raise ValueError(
+                    f"checkpoint {k}={payload[k]!r} does not match this "
+                    f"allocator's {k}={getattr(self, k)!r}")
+        self.state = ClusterState.from_payload(payload["state"])
+        self.frameworks = {
+            fid: FrameworkState(
+                fid=fid,
+                demand=(None if p["demand"] is None
+                        else np.array(p["demand"])),
+                wanted_tasks=p["wanted_tasks"],
+                usage=np.array(p["usage"]),
+                tasks={a: [np.array(b) for b in bs]
+                       for a, bs in p["tasks"].items()},
+                slack={a: np.array(s) for a, s in p["slack"].items()},
+                grants=p["grants"], phi=p["phi"],
+                allowed_agents=(None if p["allowed_agents"] is None
+                                else set(p["allowed_agents"])),
+                revocable=dict(p["revocable"]),
+            )
+            for fid, p in payload["frameworks"].items()}
+        self.rng.bit_generator.state = payload["rng_state"]
+        self.fault_stats.restore(payload["fault"])
+        self.device_health.restore(payload["health"])
+        self._inflight_epoch = None
+        self._fair_cache = None
+        self.last_revocations = []
 
     # -- dict-style views (read-only; canonical data is in self.state) -------
 
@@ -277,6 +420,8 @@ class OnlineAllocator:
 
     def add_agent(self, name: str, capacity) -> None:
         self.state.add_agent(name, capacity)
+        self._journal_rec({"t": _journal.AGENT_ADD, "name": name,
+                           "cap": np.asarray(capacity, np.float64)})
 
     def remove_agent(self, name: str) -> list[tuple[str, int]]:
         """Remove an agent (failure). Returns [(fid, n_executors_lost)].
@@ -298,6 +443,7 @@ class OnlineAllocator:
         self.state.remove_agent(name)
         for fid, _n in lost:
             self._sync_demand(fid)
+        self._journal_rec({"t": _journal.AGENT_REMOVE, "name": name})
         return lost
 
     def register(self, fid: str, demand=None, wanted_tasks: int = 1,
@@ -315,6 +461,11 @@ class OnlineAllocator:
         self.state.add_framework(fid, demand=d, phi=phi,
                                  allowed_agents=allowed_agents,
                                  wanted=wanted_tasks)
+        self._journal_rec({
+            "t": _journal.FW_REGISTER, "fid": fid, "demand": d,
+            "wanted": wanted_tasks, "phi": float(phi),
+            "allowed": (None if allowed_agents is None
+                        else sorted(allowed_agents))})
 
     def deregister(self, fid: str) -> None:
         fw = self.frameworks.pop(fid)
@@ -327,6 +478,7 @@ class OnlineAllocator:
             if j is not None:
                 self.state.FREE[j] += s
         self.state.remove_framework(fid)
+        self._journal_rec({"t": _journal.FW_DEREGISTER, "fid": fid})
 
     def release_executor(self, fid: str, agent: str) -> None:
         fw = self.frameworks[fid]
@@ -342,6 +494,8 @@ class OnlineAllocator:
         if agent in self.state.agent2slot:
             self.state.release(fid, agent, bundle, revocable_units=rev_units)
         self._sync_demand(fid)
+        self._journal_rec({"t": _journal.RELEASE, "fid": fid,
+                           "agent": agent})
 
     def revoke_executor(self, fid: str, agent: str):
         """Revoke one REVOCABLE executor of fid on agent (preemption).
@@ -368,12 +522,15 @@ class OnlineAllocator:
         fw.revocable[agent] -= 1
         self.state.revoke(fid, agent, bundle)
         self._sync_demand(fid)
+        self._journal_rec({"t": _journal.REVOKE, "fid": fid, "agent": agent})
         return _preemption.Revocation(fid=fid, agent=agent, bundle=bundle,
                                       n_executors=1)
 
     def set_wanted(self, fid: str, wanted_tasks: int) -> None:
         self.frameworks[fid].wanted_tasks = wanted_tasks
         self.state.set_wanted(fid, wanted_tasks)
+        self._journal_rec({"t": _journal.SET_WANTED, "fid": fid,
+                           "wanted": wanted_tasks})
 
     def force_place(self, fid: str, agent: str, n_executors: int = 1) -> None:
         """Place executors bypassing the criterion (constructing an initial
@@ -388,6 +545,8 @@ class OnlineAllocator:
         fw.tasks.setdefault(agent, []).extend([d.copy()] * n_executors)
         fw.usage = fw.usage + bundle
         self._sync_demand(fid)
+        self._journal_rec({"t": _journal.FORCE_PLACE, "fid": fid,
+                           "agent": agent, "n": n_executors})
 
     # -- scoring ------------------------------------------------------------
 
@@ -474,6 +633,14 @@ class OnlineAllocator:
             return self.allocate_batched(per_agent_limit,
                                          use_kernel=use_kernel)
         self._preempt_pass()   # epoch-level pass precedes the grant loop
+        # per-grant epochs are journal-bracketed too: even a zero-grant RRR
+        # epoch draws permutations, so recovery needs the commit record's
+        # rng fast-forward (skipped only when the epoch cannot draw at all).
+        jrnl = (self.journal is not None and bool(self.frameworks)
+                and self.state.n_agents > 0)
+        if jrnl:
+            self._journal_begin("pergrant-loop", per_agent_limit,
+                                self.rng.bit_generator.state)
         grants: list[Grant] = []
         used: dict[str, int] = {}
         guard = 0
@@ -487,6 +654,8 @@ class OnlineAllocator:
             )
             g = self._allocate_one(blocked)
             if g is None:
+                if jrnl:
+                    self._journal_commit(grants)
                 if self.audit:
                     _invariants.assert_invariants(self)
                 return grants
@@ -765,6 +934,14 @@ class OnlineAllocator:
                 TD[i] = self._true_demand(f)
         TD.setflags(write=False)
         kernel = self._resolve_kernel(use_kernel, N, len(view.agents), tie)
+        # bracket opens at kernel resolution: every rng draw (fused preperm
+        # prefix, host per-round permutations) lands inside it, and a crash
+        # before the matching commit/abort record recovers by rewinding to
+        # rng_state0 (the deterministic-abort rule).
+        self._journal_begin(
+            {"fused": "fused", "pergrant": "host-pergrant",
+             False: "host"}[kernel],
+            per_agent_limit, rng_state0, view=view, TD=TD, tie=tie)
 
         # precomputed-epoch lookup BEFORE any dispatch: a hit skips the
         # engine entirely and replays the recorded sequence — deferred to
@@ -801,6 +978,7 @@ class OnlineAllocator:
                     self._inflight_epoch = epoch
                     return epoch
                 grants = self._apply_seq(view, TD, out.seq)
+                self._journal_commit(grants)
                 if self.audit:
                     _invariants.assert_invariants(self)
                 return InFlightEpoch(view=view, TD=TD,
@@ -839,6 +1017,7 @@ class OnlineAllocator:
             seq = tuple(seq)
             self.epoch_cache.store(key, _epoch_cache.EpochOutcome(
                 seq, seq_digest=_epoch_cache.seq_digest_of(seq)))
+        self._journal_commit(grants)
         if self.audit:
             _invariants.assert_invariants(self)
         return InFlightEpoch(view=view, TD=TD,
@@ -872,6 +1051,7 @@ class OnlineAllocator:
                 self.rng.bit_generator.state = epoch.rng_state0
             self.fault_stats.commit_refusals += 1
             self._notify_fault("commit-refused")
+            self._journal_abort()
             raise RuntimeError(
                 "cluster state mutated while an allocation epoch was in "
                 "flight; commit_epoch() must run before any other allocator "
@@ -882,6 +1062,7 @@ class OnlineAllocator:
             grants = self._apply_seq(epoch.view, epoch.TD, epoch.cached_seq)
         else:
             grants = self._commit_fused(epoch)
+        self._journal_commit(grants)
         if self.audit:
             _invariants.assert_invariants(self)
         return grants
@@ -1039,6 +1220,7 @@ class OnlineAllocator:
             self.rng.bit_generator.state = epoch.rng_state0
         self.fault_stats.epoch_aborts += 1
         self._notify_fault("epoch-abort")
+        self._journal_abort()
         return True
 
     def _allocate_batched_host(self, per_agent_limit, tie, kernel,
@@ -1171,6 +1353,10 @@ class OnlineAllocator:
         fw.usage = fw.usage + bundle
         fw.grants += 1
         self._sync_demand(fid)
+        # every grant path funnels through here, so one journal hook covers
+        # per-grant, batched-host, device-commit and cache-replay grants;
+        # recovery replays the records through this same method.
+        self._journal_rec({"t": _journal.GRANT, "fid": fid, "agent": agent})
         return Grant(fid=fid, agent=agent, bundle=bundle, n_executors=n_exec,
                      revocable=revocable)
 

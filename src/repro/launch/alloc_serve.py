@@ -14,17 +14,27 @@ served-decisions/sec, decision-latency p50/p99
 
     PYTHONPATH=src python -m repro.launch.alloc_serve --smoke \
         --out SERVE_cache_stats.json
+
+With ``--state-dir`` the service is durable (:mod:`repro.core.journal`):
+every mutation is journaled, full snapshots + cache spills land every
+``--snapshot-every`` epochs, and restarting on the same directory recovers
+the grant ledger, quarantine state and a warm cache — crash-tested by
+``--kill-restart-smoke`` (SIGKILL mid-serve, restart, auditor + warm-hit
+asserts; the CI chaos job runs it and archives the recovery stats).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
 from repro.core import faults as _faults
+from repro.core import invariants as _invariants
+from repro.core import journal as _journal
 from repro.core import metrics as _metrics
 from repro.core.online import OnlineAllocator
 
@@ -72,13 +82,36 @@ class AllocatorService:
                  epoch_cache=True, use_kernel="auto", seed: int = 0,
                  max_queue: Optional[int] = None, max_retries: int = 2,
                  backoff_s: float = 0.02, clock=time.monotonic,
-                 fault_injector=None, recovery=None):
+                 fault_injector=None, recovery=None,
+                 state_dir: Optional[str] = None, snapshot_every: int = 16,
+                 fsync_every: int = 8):
         self.alloc = OnlineAllocator(
             n_resources, criterion=criterion, server_policy=server_policy,
             seed=seed, epoch_cache=epoch_cache,
             fault_injector=fault_injector, recovery=recovery)
-        for name, cap in agents:
-            self.alloc.add_agent(name, cap)
+        # durability (docs/robustness.md): recover FIRST (snapshot + journal
+        # replay + warm cache), then attach the live journal, and only seed
+        # the agent roster on a genuinely fresh state dir — a recovered one
+        # already replayed its own agent-add records.
+        self.state_dir = None if state_dir is None else str(state_dir)
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.recovery_stats: Optional[dict] = None
+        self.cache_load_stats: Optional[dict] = None
+        recovered = False
+        if self.state_dir is not None:
+            os.makedirs(self.state_dir, exist_ok=True)
+            self.recovery_stats = _journal.recover(self.alloc, self.state_dir)
+            recovered = (self.recovery_stats["snapshot_loaded"]
+                         or self.recovery_stats["journal_records"] > 0)
+            if self.alloc.epoch_cache is not None:
+                self.cache_load_stats = self.alloc.epoch_cache.load(
+                    os.path.join(self.state_dir, _journal.CACHE_FILE))
+            self.alloc.journal = _journal.Journal(
+                os.path.join(self.state_dir, _journal.JOURNAL_FILE),
+                fsync_every=fsync_every)
+        if not recovered:
+            for name, cap in agents:
+                self.alloc.add_agent(name, cap)
         self.use_kernel = use_kernel
         self.clock = clock
         self.max_queue = max_queue
@@ -147,7 +180,30 @@ class AllocatorService:
         self.latency.record(dt, max(len(grants), 1))
         self.decisions += len(grants)
         self.epochs += 1
+        if (self.state_dir is not None
+                and self.epochs % self.snapshot_every == 0):
+            self.checkpoint()
         return grants
+
+    def checkpoint(self) -> None:
+        """Persist a full snapshot + cache spill into the state dir (no-op
+        without one).  Bounds recovery replay to the records appended
+        since; runs automatically every ``snapshot_every`` epochs."""
+        if self.state_dir is None:
+            return
+        _journal.write_snapshot(self.state_dir, self.alloc,
+                                self.alloc.journal)
+        if self.alloc.epoch_cache is not None:
+            self.alloc.epoch_cache.save(
+                os.path.join(self.state_dir, _journal.CACHE_FILE))
+
+    def close(self) -> None:
+        """Final checkpoint + journal close (clean shutdown; a SIGKILL
+        skips this and recovery picks up from the journal instead)."""
+        self.checkpoint()
+        if self.alloc.journal is not None:
+            self.alloc.journal.close()
+            self.alloc.journal = None
 
     def complete(self, fid: str) -> None:
         """A framework finished: release its executors and deregister —
@@ -159,6 +215,30 @@ class AllocatorService:
             while fw.tasks.get(agent):
                 self.alloc.release_executor(fid, agent)
         self.alloc.deregister(fid)
+
+    def counters(self) -> dict:
+        """Reset-free monotonic counters snapshot (reading never mutates
+        anything — dashboards can poll at any cadence).  Includes the
+        journal-lag view: records appended since the last fsync (the
+        power-loss exposure window) and since the last snapshot (the
+        recovery replay length), so durability lag is alertable."""
+        out = {
+            "epochs": self.epochs,
+            "decisions": self.decisions,
+            "queue_depth": len(self._queue),
+            "rejected_backpressure": self.rejected_backpressure,
+            "rejected_deadline": self.rejected_deadline,
+            "epoch_retries": self.epoch_retries,
+            "epoch_failures": self.epoch_failures,
+            "journal_lag_fsync": 0,
+            "journal_lag_snapshot": 0,
+        }
+        if self.alloc.journal is not None:
+            jc = self.alloc.journal.counters()
+            out["journal"] = jc
+            out["journal_lag_fsync"] = jc["records_since_fsync"]
+            out["journal_lag_snapshot"] = jc["records_since_snapshot"]
+        return out
 
     def health(self) -> dict:
         """Liveness/degradation endpoint: ``status`` is ``"degraded"``
@@ -173,17 +253,23 @@ class AllocatorService:
             "epoch_retries": self.epoch_retries,
             "epoch_failures": self.epoch_failures,
             "faults": self.alloc.fault_counters(),
+            "counters": self.counters(),
         }
 
     def stats(self) -> dict:
         cache = self.alloc.epoch_cache
-        return {
+        out = {
             "epochs": self.epochs,
             "decisions": self.decisions,
             "latency": self.latency.summary(),
             "cache": cache.stats() if cache is not None else None,
             "health": self.health(),
         }
+        if self.recovery_stats is not None:
+            out["recovery"] = dict(self.recovery_stats)
+            out["cache_load"] = (None if self.cache_load_stats is None
+                                 else dict(self.cache_load_stats))
+        return out
 
 
 def make_profiles(n_profiles: int, n_frameworks: int, n_resources: int = 2,
@@ -203,13 +289,16 @@ def make_profiles(n_profiles: int, n_frameworks: int, n_resources: int = 2,
     return profiles
 
 
-def drive(service: AllocatorService, profiles: list, rounds: int) -> dict:
+def drive(service: AllocatorService, profiles: list, rounds: int,
+          round_sleep: float = 0.0) -> dict:
     """Serve ``rounds`` request batches cycling over the profile set.
 
     Each round submits one profile's requests, drains an epoch, and
     completes every framework (executors release, capacity returns), so
-    from the second cycle on every epoch replays from the cache.  Returns
-    the service stats plus wall-clock throughput."""
+    from the second cycle on every epoch replays from the cache.
+    ``round_sleep`` throttles the loop (the kill-restart smoke uses it to
+    widen the mid-serve window it SIGKILLs into).  Returns the service
+    stats plus wall-clock throughput."""
     t0 = time.perf_counter()
     for r in range(rounds):
         for req in profiles[r % len(profiles)]:
@@ -221,6 +310,8 @@ def drive(service: AllocatorService, profiles: list, rounds: int) -> dict:
         # the next round's registration recreates the profile exactly
         for fid in list(service.alloc.frameworks):
             service.complete(fid)
+        if round_sleep > 0:
+            time.sleep(round_sleep)
     wall = time.perf_counter() - t0
     out = service.stats()
     out["wall_s"] = wall
@@ -232,7 +323,8 @@ def serve(n_agents: int = 64, n_frameworks: int = 40, n_profiles: int = 4,
           rounds: int = 64, criterion: str = "drf",
           server_policy: str = "pooled", use_kernel="auto",
           epoch_cache=True, seed: int = 0,
-          inject_faults: bool = False) -> dict:
+          inject_faults: bool = False, state_dir: Optional[str] = None,
+          snapshot_every: int = 16, round_sleep: float = 0.0) -> dict:
     agents = [(f"a{j}", _AGENT_TYPES[j % len(_AGENT_TYPES)])
               for j in range(n_agents)]
     injector = recovery = None
@@ -247,17 +339,111 @@ def serve(n_agents: int = 64, n_frameworks: int = 40, n_profiles: int = 4,
     service = AllocatorService(
         2, agents, criterion=criterion, server_policy=server_policy,
         epoch_cache=epoch_cache, use_kernel=use_kernel, seed=seed,
-        fault_injector=injector, recovery=recovery)
+        fault_injector=injector, recovery=recovery,
+        state_dir=state_dir, snapshot_every=snapshot_every)
     profiles = make_profiles(n_profiles, n_frameworks, seed=seed)
-    out = drive(service, profiles, rounds)
+    out = drive(service, profiles, rounds, round_sleep=round_sleep)
+    if state_dir is not None:
+        service.close()
     out["config"] = {
         "n_agents": n_agents, "n_frameworks": n_frameworks,
         "n_profiles": n_profiles, "rounds": rounds, "criterion": criterion,
         "server_policy": server_policy, "use_kernel": str(use_kernel),
         "epoch_cache": bool(epoch_cache), "seed": seed,
         "inject_faults": bool(inject_faults),
+        "state_dir": state_dir, "snapshot_every": snapshot_every,
     }
     return out
+
+
+def kill_restart_smoke(state_dir: str, out_path: Optional[str] = None, *,
+                       seed: int = 0, n_agents: int = 16,
+                       n_frameworks: int = 8, n_profiles: int = 3,
+                       wait_s: float = 60.0) -> dict:
+    """Crash-recovery smoke (CI chaos job): SIGKILL a serving subprocess
+    mid-flight, restart on the same ``--state-dir``, and prove the
+    recovered replica is whole — the PR-8 invariant auditor is green on
+    the recovered ledger and the reloaded cache serves its first repeat
+    profile as a HIT (warm restart, no re-dispatch)."""
+    import pathlib
+    import signal  # noqa: F401  (documents the delivery; kill() sends it)
+    import subprocess
+    import sys
+
+    sd = pathlib.Path(state_dir)
+    sd.mkdir(parents=True, exist_ok=True)
+    for name in (_journal.JOURNAL_FILE, _journal.SNAPSHOT_FILE,
+                 _journal.CACHE_FILE):
+        (sd / name).unlink(missing_ok=True)
+    env = dict(os.environ)
+    src_root = pathlib.Path(__file__).resolve().parents[2]
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(src_root)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    child = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.alloc_serve",
+         "--agents", str(n_agents), "--frameworks", str(n_frameworks),
+         "--profiles", str(n_profiles), "--rounds", "1000000",
+         "--round-sleep", "0.002", "--seed", str(seed),
+         "--state-dir", str(sd), "--snapshot-every", "4"],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.monotonic() + wait_s
+        while time.monotonic() < deadline:
+            if ((sd / _journal.SNAPSHOT_FILE).exists()
+                    and (sd / _journal.CACHE_FILE).exists()):
+                break
+            if child.poll() is not None:
+                raise RuntimeError("serve child exited before its first "
+                                   "snapshot (crashed at startup?)")
+            time.sleep(0.05)
+        else:
+            raise RuntimeError(f"serve child wrote no snapshot in {wait_s}s")
+        time.sleep(0.3)   # run PAST the snapshot so the kill lands on a
+    finally:              # journal tail (and likely an open epoch bracket)
+        child.kill()      # SIGKILL: no atexit, no flush, no close()
+        child.wait()
+
+    service = AllocatorService(
+        2, [(f"a{j}", _AGENT_TYPES[j % len(_AGENT_TYPES)])
+            for j in range(n_agents)],
+        seed=seed, state_dir=str(sd))
+    stats = {"recovery": dict(service.recovery_stats),
+             "cache_load": dict(service.cache_load_stats)}
+    errs = _invariants.check(service.alloc)
+    assert errs == [], f"recovered ledger failed the auditor: {errs}"
+    assert (stats["recovery"]["snapshot_loaded"]
+            or stats["recovery"]["journal_records"] > 0), \
+        f"restart recovered nothing: {stats['recovery']}"
+    assert stats["cache_load"]["loaded"] > 0, \
+        f"warm cache loaded no entries: {stats['cache_load']}"
+    cache = service.alloc.epoch_cache
+    h0, m0 = cache.hits, cache.misses
+    # the killed run's leftover frameworks release (dyadic demands: the
+    # round-trip is bit-exact), then the first repeat profile must be a hit
+    for fid in list(service.alloc.frameworks):
+        service.complete(fid)
+    for req in make_profiles(n_profiles, n_frameworks, seed=seed)[0]:
+        service.submit(req)
+    service.drain_epoch()
+    assert cache.hits == h0 + 1 and cache.misses == m0, \
+        (f"warm restart did not serve the repeat profile from cache: "
+         f"hits {h0}->{cache.hits}, misses {m0}->{cache.misses}")
+    stats["warm_hit"] = True
+    stats["ledger_invariants"] = "green"
+    stats["counters"] = service.counters()
+    service.close()
+    print(f"kill-restart smoke OK: replayed "
+          f"{stats['recovery']['replayed_records']} records past lsn "
+          f"{stats['recovery']['snapshot_lsn']}, recovered aborts "
+          f"{stats['recovery']['recovered_aborts']}, warm cache "
+          f"{stats['cache_load']['loaded']} entries -> first repeat hit")
+    if out_path:
+        path = pathlib.Path(out_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(stats, indent=2))
+        print(f"wrote {path}")
+    return stats
 
 
 def main(argv: Optional[Sequence[str]] = None) -> dict:
@@ -281,8 +467,23 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                          "quarantine reported by the health endpoint)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write stats JSON here")
+    ap.add_argument("--state-dir", default=None,
+                    help="durable state directory (journal + snapshots + "
+                         "cache spill); restarting on the same dir recovers "
+                         "the ledger and warm cache")
+    ap.add_argument("--snapshot-every", type=int, default=16,
+                    help="full snapshot + cache spill cadence, in epochs")
+    ap.add_argument("--round-sleep", type=float, default=0.0,
+                    help="throttle between serve rounds, seconds")
+    ap.add_argument("--kill-restart-smoke", action="store_true",
+                    help="chaos: SIGKILL a serving subprocess mid-flight, "
+                         "restart on the same --state-dir, assert recovered "
+                         "ledger invariants + a warm-cache repeat hit")
     args = ap.parse_args(argv)
 
+    if args.kill_restart_smoke:
+        return kill_restart_smoke(args.state_dir or "serve-state",
+                                  args.out, seed=args.seed)
     if args.smoke:
         args.agents, args.frameworks = min(args.agents, 64), 40
         args.profiles, args.rounds = 4, 32
@@ -290,7 +491,10 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                 n_profiles=args.profiles, rounds=args.rounds,
                 criterion=args.criterion, server_policy=args.policy,
                 use_kernel=args.kernel, epoch_cache=not args.no_cache,
-                seed=args.seed, inject_faults=args.inject_faults)
+                seed=args.seed, inject_faults=args.inject_faults,
+                state_dir=args.state_dir,
+                snapshot_every=args.snapshot_every,
+                round_sleep=args.round_sleep)
     if args.smoke and args.inject_faults:
         health = out["health"]
         faults = health["faults"]

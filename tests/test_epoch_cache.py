@@ -400,6 +400,54 @@ def test_lru_recency_order():
     assert cache.lookup(keys[0]) is not None
 
 
+def test_eviction_prefers_least_hit_in_cold_window():
+    """Recurrence-aware twist: among the EVICT_WINDOW coldest entries,
+    the one with the fewest lifetime hits goes first — a cold-but-
+    recurrent profile outlives a once-seen one that happens to be less
+    stale."""
+    entry = 16 * 4 + 64 + 20
+    cache = EpochCache(max_bytes=4 * entry + 10)
+    keys = [bytes([k]) * 20 for k in range(4)]
+    for k in keys:
+        cache.store(k, EpochOutcome(((0, 0),) * 4))
+    cache.lookup(keys[0]); cache.lookup(keys[0])   # recurrent: 2 hits
+    for k in keys[1:]:
+        cache.lookup(k)                            # 1 hit each
+    # recency order is again k0 < k1 < k2 < k3; pure LRU would evict k0
+    cache.store(bytes([9]) * 20, EpochOutcome(((0, 0),) * 4))
+    assert keys[0] in cache._entries               # saved by its hit count
+    assert keys[1] not in cache._entries           # least-hit in the window
+    assert all(k in cache._entries for k in keys[2:])
+
+
+def test_eviction_pure_lru_on_hit_ties():
+    entry = 16 * 4 + 64 + 20
+    cache = EpochCache(max_bytes=4 * entry + 10)
+    keys = [bytes([k]) * 20 for k in range(4)]
+    for k in keys:
+        cache.store(k, EpochOutcome(((0, 0),) * 4))
+    cache.store(bytes([9]) * 20, EpochOutcome(((0, 0),) * 4))
+    assert keys[0] not in cache._entries           # all hits tie -> coldest
+    assert all(k in cache._entries for k in keys[1:])
+
+
+def test_spill_preserves_hit_counts_and_order(tmp_path):
+    from repro.core.epoch_cache import seq_digest_of
+
+    cache = EpochCache()
+    keys = [bytes([k]) * 20 for k in range(3)]
+    for k in keys:
+        seq = ((0, 0),) * 4
+        cache.store(k, EpochOutcome(seq, seq_digest=seq_digest_of(seq)))
+    cache.lookup(keys[1]); cache.lookup(keys[1])
+    path = str(tmp_path / "spill.bin")
+    cache.save(path)
+    cold = EpochCache()
+    assert cold.load(path)["loaded"] == 3
+    assert cold._hits_by_key == cache._hits_by_key
+    assert list(cold._entries) == list(cache._entries)   # recency order too
+
+
 def test_get_cache_spec():
     assert get_cache(None) is None and get_cache(False) is None
     assert isinstance(get_cache(True), EpochCache)
