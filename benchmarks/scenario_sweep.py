@@ -15,6 +15,13 @@ revocations and wasted task-seconds, so the trajectory document captures
 the fairness-vs-wasted-work tradeoff (Jain-over-time under churn improves,
 paid for in revoked in-flight work) per criterion.
 
+Preemption-on cells additionally run a THIRD variant with the multi-tenant
+control plane attached (``repro.core.tenancy``: admission queues fronting
+the allocator, a quota floor on the Pi group): those cells record
+admissions through the gate, per-tenant admission-latency p99, per-tenant
+Jain and SLO attainment (``TenancyHook``) — the tenancy axis the CI sweep
+asserts non-inert.
+
 All cells run the incremental batched epoch engine (``batched=True``; the
 per-grant legacy path is available via ``--pergrant`` for comparison) —
 ``run_paper_experiment`` asserts engine parity on first use.  Every cell
@@ -90,16 +97,30 @@ def _downsample(t, v, max_points: int = 64):
     return t[idx].tolist(), v[idx].tolist()
 
 
-def _cell(workload_name, criterion, policy, seed, batched, quick, preempt):
+def _cell(workload_name, criterion, policy, seed, batched, quick, preempt,
+          tenancy=False):
     """One grid cell.  Takes only picklable primitives (the workload builder
     is re-resolved by name) so cells can run in worker processes."""
     builder = _workload_builders(quick)[workload_name]
     t0 = time.perf_counter()
     fair, slow, pre = FairnessTimelineHook(), SlowdownHook(), PreemptionHook()
+    hooks = [fair, slow, pre]
+    tcfg = ten_hook = None
+    if tenancy:
+        # tenancy-on cells (preemption-on only): the control plane fronts
+        # arrivals — admission queues + a quota floor on the Pi group —
+        # and the TenancyHook records per-tenant Jain / admission latency
+        # / SLO attainment for the trajectory document.
+        from repro.core.metrics import TenancyHook
+        from repro.core.tenancy import TenancyConfig
+
+        tcfg = TenancyConfig(floors=(("Pi", 0.25),))
+        ten_hook = TenancyHook()
+        hooks.append(ten_hook)
     r = run_paper_experiment(
         criterion, "characterized", server_policy=policy, seed=seed,
-        batched=batched, workload=builder(), hooks=[fair, slow, pre],
-        preemption=preempt, epoch_cache=True,
+        batched=batched, workload=builder(), hooks=hooks,
+        preemption=preempt, tenancy=tcfg, epoch_cache=True,
     )
     wall = time.perf_counter() - t0
     f = fair.summary()
@@ -108,9 +129,28 @@ def _cell(workload_name, criterion, policy, seed, batched, quick, preempt):
     # stream was repeat-profile traffic (rrr cells report 0/0 — the host
     # RRR policy is outside cache eligibility, see epoch_cache.py)
     cs = r.cache_stats or {}
+    # multi-tenant telemetry (tenancy-on cells): total admissions through
+    # the gate, worst per-tenant admission p99 (virtual sim time), and the
+    # per-tenant Jain / SLO-attainment summaries.
+    tenancy_row = {"tenancy": bool(tenancy), "admissions": 0,
+                   "admission_p99_ms": 0.0, "tenant_metrics": None}
+    if ten_hook is not None:
+        ts_sum = ten_hook.summary()
+        adm = ts_sum.get("admission", {})
+        tenancy_row.update(
+            admissions=ts_sum.get("counters", {}).get(
+                "admission_admitted_total", 0),
+            admission_p99_ms=max(
+                (v["p99_ms"] for v in adm.values()), default=0.0),
+            tenant_metrics={
+                "tenant_jain_tw_mean": ts_sum.get("tenant_jain_tw_mean"),
+                "tenant_jain_min": ts_sum.get("tenant_jain_min"),
+                "slo_attainment": ts_sum.get("slo_attainment"),
+                "tenant_share_tw_mean": ts_sum.get("tenant_share_tw_mean"),
+            })
     return {
         "workload": workload_name, "criterion": criterion, "policy": policy,
-        "seed": seed, "preemption": bool(preempt),
+        "seed": seed, "preemption": bool(preempt), **tenancy_row,
         "makespan": r.makespan,
         "wall_s": wall,
         "used_cpu": r.mean_used(0), "used_mem": r.mean_used(1),
@@ -161,12 +201,17 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
     if seeds is None:
         seeds = (0,) if quick else (0, 1)
     builders = _workload_builders(quick)
-    cells = [(wname, crit, pol, seed, batched, quick, pre)
+    # the tenancy axis rides on preemption-on cells only (floors and
+    # shields are mechanisms OF the preemption pass — a tenancy-on
+    # preemption-off cell would exercise nothing), keeping the quick grid
+    # at 72 cells: 4 workloads x 3 criteria x 2 policies x (off, pre, pre+ten)
+    cells = [(wname, crit, pol, seed, batched, quick, pre, ten)
              for wname in builders
              for crit in criteria
              for pol in policies
              for seed in seeds
-             for pre in preemption]
+             for pre in preemption
+             for ten in ((False, True) if pre else (False,))]
     if jobs == 1:
         _warm_worker()          # outside the timer, like the pool workers
     t0 = time.perf_counter()
@@ -185,20 +230,22 @@ def run(criteria=None, policies=None, seeds=None, quick: bool = False,
         "sweep_wall_s": sweep_wall,
         "grid": {"workloads": list(builders), "criteria": list(criteria),
                  "policies": list(policies), "seeds": list(seeds),
-                 "preemption": [bool(p) for p in preemption]},
+                 "preemption": [bool(p) for p in preemption],
+                 "tenancy": "on preemption-on cells"},
         "results": results,
     }
     if print_csv:
-        print("workload,criterion,policy,seed,preempt,makespan,used_cpu,"
-              "jain_tw,jain_min,worst_p95_slowdown,revoked,wasted_s,"
-              "cache_hit,wall_s")
+        print("workload,criterion,policy,seed,preempt,tenancy,makespan,"
+              "used_cpu,jain_tw,jain_min,worst_p95_slowdown,revoked,"
+              "wasted_s,admissions,cache_hit,wall_s")
         for r in results:
             worst = max((g["p95"] for g in r["slowdown"].values()), default=0.0)
             print(f"{r['workload']},{r['criterion']},{r['policy']},{r['seed']},"
-                  f"{int(r['preemption'])},"
+                  f"{int(r['preemption'])},{int(r['tenancy'])},"
                   f"{r['makespan']:.1f},{r['used_cpu']:.3f},"
                   f"{r['jain_tw_mean']:.3f},{r['jain_min']:.3f},{worst:.2f},"
                   f"{r['executors_revoked']},{r['revoked_wasted_s']:.1f},"
+                  f"{r['admissions']},"
                   f"{r['cache_hit_rate']:.3f},{r['wall_s']:.2f}")
         print(f"# {len(results)} cells in {sweep_wall:.1f}s "
               f"(jobs={jobs})")

@@ -181,6 +181,27 @@ def check(al, *, atol: float = 1e-6) -> list:
     stray = st.X[~live_f].sum() + st.X[:, ~live_a].sum()
     if abs(stray) > atol:
         errs.append(f"X carries {stray:.6g} executors outside live slots")
+
+    # -- tenancy control plane (when attached) -------------------------------
+    cp = getattr(al, "tenancy", None)
+    if cp is not None:
+        for t in sorted(set(cp.credits) | set(cp.accrued) | set(cp.spent)):
+            bal = cp.credits.get(t, 0.0)
+            acc = cp.accrued.get(t, 0.0)
+            sp = cp.spent.get(t, 0.0)
+            if abs(acc - sp - bal) > max(atol, cp.cfg.eps):
+                errs.append(f"tenant {t!r} credit conservation broken: "
+                            f"accrued {acc:.6g} - spent {sp:.6g} != "
+                            f"balance {bal:.6g}")
+            if bal < -max(atol, cp.cfg.eps):
+                errs.append(f"tenant {t!r} credit balance negative: {bal:.6g}")
+        queued = [e.fid for e in cp.queue]
+        if len(set(queued)) != len(queued):
+            errs.append(f"admission queue holds duplicate fids: {queued}")
+        for fid in queued:
+            if fid in al.frameworks:
+                errs.append(f"{fid!r} both queued for admission and "
+                            f"registered")
     return errs
 
 
@@ -240,6 +261,18 @@ def recovery_parity(ref, rec) -> list:
                 break
     if ref.rng.bit_generator.state != rec.rng.bit_generator.state:
         errs.append("rng stream position differs")
+    if ref.epoch_counter != rec.epoch_counter:
+        errs.append(f"epoch counter {ref.epoch_counter} vs "
+                    f"{rec.epoch_counter}")
+    if ref._grant_epoch != rec._grant_epoch:
+        errs.append("hysteresis grant-epoch ledger differs")
+    cp1, cp2 = ref.tenancy, rec.tenancy
+    if (cp1 is None) != (cp2 is None):
+        errs.append("tenancy control plane attached on one side only")
+    elif cp1 is not None:
+        if cp1.state_dict() != cp2.state_dict():
+            errs.append("tenancy control-plane state differs (queue/"
+                        "credits/shields)")
     return errs
 
 

@@ -86,6 +86,17 @@ EPOCH_BEGIN = "epoch-begin"
 EPOCH_COMMIT = "epoch-commit"
 EPOCH_ABORT = "epoch-abort"
 FAULT_STATE = "fault-state"
+# multi-tenant control plane (repro.core.tenancy): admission-queue and
+# credit-ledger mutations.  All three are written OUTSIDE epoch brackets
+# (the admission gate runs before _journal_begin), so replay applies them
+# eagerly exactly where the live run did; credit records carry ABSOLUTE
+# post-op balances, making their replay order-independent.  ADMIT is
+# atomic — it subsumes the framework registration (no separate
+# fw-register record is written for an admitted framework), so a torn
+# tail can never leave a dequeued-but-unregistered framework behind.
+ADMIT_ENQUEUE = "admit-enqueue"
+ADMIT = "admit"
+CREDIT = "credit"
 
 
 class JournalError(RuntimeError):
@@ -303,6 +314,39 @@ def _apply_record(al, rec: dict) -> None:
     elif t == FAULT_STATE:
         al.fault_stats.restore(rec["fault"])
         al.device_health.restore(rec["health"])
+    elif t in (ADMIT_ENQUEUE, ADMIT, CREDIT):
+        cp = al.tenancy
+        if cp is None:
+            raise JournalError(
+                "journal carries tenancy control-plane records but the "
+                "recovering allocator has no tenancy attached")
+        if t == ADMIT_ENQUEUE:
+            cp.enqueue(fid=rec["fid"], tenant=rec["tenant"],
+                       demand=rec["demand"], wanted=rec["wanted"],
+                       phi=rec["phi"], allowed=rec["allowed"],
+                       t_enqueue=rec["tq"], seq=rec["seq"])
+        elif t == ADMIT:
+            # atomic batch: dequeue + register every framework the gate
+            # admitted that epoch from the queued entries (rebuilt by the
+            # admit-enqueue replay) — a cut can never separate an
+            # admission from its registration (the gate suppresses the
+            # separate fw-register records), and the gate-epoch watermark
+            # stops the re-run of a dangling epoch from admitting again.
+            for fid in rec["fids"]:
+                entry = cp.dequeue(fid)
+                al.register(entry.fid, demand=entry.demand,
+                            wanted_tasks=entry.wanted, phi=entry.phi,
+                            allowed_agents=entry.allowed)
+                cp.tenant_of[entry.fid] = entry.tenant
+            cp.last_gate_epoch = max(cp.last_gate_epoch,
+                                     int(rec["epoch"]))
+        else:  # CREDIT: absolute post-op maps, plus the jump flag
+            cp.restore_credit_state(rec)
+            if rec["op"] == "spend-jump":
+                cp.find_queued(rec["fid"]).jumped = True
+                cp.jumps_total += 1
+            elif rec["op"] == "spend-shield":
+                cp.shields_total += 1
     else:
         raise JournalError(f"unknown journal record type {t!r}")
 
@@ -371,6 +415,16 @@ def recover(al, state_dir: str) -> dict:
                     raise JournalError(
                         "epoch-commit digest does not match its grant "
                         "records (journal corrupt past CRC framing)")
+                # restore the counter the live epoch ticked to BEFORE the
+                # grants replay: they stamp the hysteresis ledger with it.
+                # Only closed brackets restore it — a dangling begin must
+                # leave the counter pre-epoch (the deterministic abort
+                # recovers "as if the epoch never began", and the re-run
+                # re-ticks it).  Pre-tenancy journals carry no "epoch"
+                # field; the counter then stays wherever the snapshot
+                # left it.
+                if pending is not None and "epoch" in pending:
+                    al.epoch_counter = int(pending["epoch"])
                 for fid, agent in pending_grants:
                     al._grant(fid, agent)
                 al.rng.bit_generator.state = rec["rng_state"]
@@ -380,6 +434,10 @@ def recover(al, state_dir: str) -> dict:
             elif t == EPOCH_ABORT:
                 # aborted epochs applied nothing; the record carries the
                 # post-abort (rewound) rng position and final counters.
+                # The live abort kept the epoch tick (only the DANGLING
+                # bracket recovers as never-begun), so restore it here.
+                if pending is not None and "epoch" in pending:
+                    al.epoch_counter = int(pending["epoch"])
                 al.rng.bit_generator.state = rec["rng_state"]
                 al.fault_stats.restore(rec["fault"])
                 al.device_health.restore(rec["health"])

@@ -140,6 +140,14 @@ class SimHook:
         are identical to pre-preemption runs."""
         pass
 
+    def on_admission(self, t: float, fid: str, tenant: str,
+                     wait_s: float) -> None:
+        """Tenancy (repro.core.tenancy): the admission gate admitted a
+        queued arrival at simulator time ``t`` after ``wait_s`` seconds in
+        the queue.  Only called when a control plane is attached, so hook
+        streams with tenancy off are identical to pre-tenancy runs."""
+        pass
+
     def on_fault(self, t: float, kind: str, info: dict) -> None:
         """Chaos (repro.core.faults): a fault fired — an injected agent
         crash / framework disconnect / cache corruption, or an allocator-
@@ -397,6 +405,92 @@ class JournalStatsHook(SimHook):
         if self.journal is None:
             return {}
         return dict(self.journal.counters())
+
+
+class TenancyHook(SimHook):
+    """Multi-tenant control-plane telemetry (repro.core.tenancy).
+
+    Per tenant: admission latency (:class:`LatencyStats` over simulator
+    virtual time), SLO attainment (fraction of finished jobs whose
+    :func:`slowdown` stays at or under ``slo_slowdown`` — default 8.0,
+    roughly the mean slowdown of the contended paper scenarios, so
+    attainment discriminates between tenants instead of saturating), aggregate
+    dominant-share trajectory and the final Jain index across tenants,
+    plus the final credit balances.
+
+    Reads ``sim.alloc.tenancy`` at start — inert (empty summary) when the
+    allocator runs without a control plane, so wiring the hook
+    unconditionally costs nothing."""
+
+    def __init__(self, slo_slowdown: float = 8.0):
+        self.slo_slowdown = float(slo_slowdown)
+        self.cp = None
+        self.admission: dict[str, LatencyStats] = {}
+        self.slo: dict[str, list] = {}          # tenant -> [met: bool]
+        self._tenant_of: dict[str, str] = {}    # fid -> tenant
+        self.t: list = []
+        self.tenant_jain: list = []
+        self._share_series: dict[str, list] = {}
+
+    def on_start(self, sim) -> None:
+        self.cp = getattr(sim.alloc, "tenancy", None)
+
+    def on_submit(self, t, jid, spec) -> None:
+        if self.cp is None:
+            return
+        self._tenant_of[jid] = getattr(spec, "tenant", None) or spec.group
+
+    def on_admission(self, t, fid, tenant, wait_s) -> None:
+        self._tenant_of[fid] = tenant
+        self.admission.setdefault(tenant, LatencyStats()).record(wait_s)
+
+    def on_finish(self, t, jid, spec, duration, n_tasks) -> None:
+        if self.cp is None:
+            return
+        tenant = self._tenant_of.get(
+            jid, getattr(spec, "tenant", None) or spec.group)
+        met = slowdown(duration, spec, n_tasks) <= self.slo_slowdown
+        self.slo.setdefault(tenant, []).append(bool(met))
+
+    def on_sample(self, sample: Sample) -> None:
+        if self.cp is None:
+            return
+        snap = sample.alloc
+        if snap.cap_total is None:
+            return
+        shares = dominant_shares(snap.usage, snap.cap_total)
+        by_tenant: dict[str, float] = {}
+        for fid, sh in zip(snap.fids, shares):
+            tenant = self._tenant_of.get(fid, fid)
+            by_tenant[tenant] = by_tenant.get(tenant, 0.0) + float(sh)
+        self.t.append(sample.t)
+        self.tenant_jain.append(
+            jain_index(list(by_tenant.values())) if by_tenant else 1.0)
+        for tenant, sh in by_tenant.items():
+            self._share_series.setdefault(
+                tenant, [0.0] * (len(self.t) - 1)).append(sh)
+        for tenant, series in self._share_series.items():
+            if len(series) < len(self.t):
+                series.append(0.0)
+
+    def summary(self) -> dict:
+        if self.cp is None:
+            return {}
+        t = np.asarray(self.t)
+        jain = np.asarray(self.tenant_jain)
+        return {
+            "tenant_jain_tw_mean": tw_mean(t, jain),
+            "tenant_jain_min": float(jain.min()) if jain.size else 1.0,
+            "admission": {ten: st.summary()
+                          for ten, st in sorted(self.admission.items())},
+            "slo_attainment": {
+                ten: (float(np.mean(v)) if v else 1.0)
+                for ten, v in sorted(self.slo.items())},
+            "tenant_share_tw_mean": {
+                ten: tw_mean(t, np.asarray(v))
+                for ten, v in sorted(self._share_series.items())},
+            "counters": self.cp.counters(),
+        }
 
 
 class SlowdownHook(SimHook):

@@ -80,6 +80,7 @@ from repro.core import faults as _faults
 from repro.core import invariants as _invariants
 from repro.core import journal as _journal
 from repro.core import preemption as _preemption
+from repro.core import tenancy as _tenancy
 from repro.core.cluster_state import ClusterState, StateView
 from repro.core.engine import (
     AUTO_KERNEL_FLOOR_CELLS,
@@ -198,6 +199,7 @@ class OnlineAllocator:
         recovery=None,                   # None | RecoveryPolicy (faults.py)
         fault_injector=None,             # faults.EngineFaultInjector (chaos)
         audit: bool = False,             # run invariants.py after epochs
+        tenancy=None,                    # None | True | TenancyConfig | ControlPlane
     ):
         if mode not in ("characterized", "oblivious"):
             raise ValueError(mode)
@@ -225,6 +227,23 @@ class OnlineAllocator:
         self._fair_cache = None   # (state._version, ctot, level) memo
         #: revocations of the most recent allocation epoch's preemption pass
         self.last_revocations: list = []
+        #: multi-tenant control plane (repro.core.tenancy; None = off —
+        #: submit_admission/spend_* are refused and every epoch path is
+        #: bit-for-bit the pre-tenancy behaviour)
+        self.tenancy = _tenancy.get_control_plane(tenancy)
+        #: allocation-epoch counter: ticks once per epoch that has work
+        #: (frameworks AND agents registered — exactly the epochs that
+        #: open a journal bracket), journaled in epoch-begin records so
+        #: recovery restores it bit-exactly.  Drives revocation hysteresis
+        #: and credit shields.
+        self.epoch_counter = 0
+        #: (fid, agent) -> epoch of the pair's NEWEST grant (preemption
+        #: enabled only) — the revocation-hysteresis freshness ledger.
+        self._grant_epoch: dict = {}
+        #: (fid, tenant, t_enqueue) admissions of recent epochs, drained
+        #: by the simulator for admission-latency hooks (telemetry only —
+        #: not part of the durable state).
+        self.last_admissions: list = []
         # -- self-healing dispatch (repro.core.faults; docs/robustness.md) --
         #: retry/backoff/quarantine knobs
         self.recovery = _faults.get_recovery(recovery)
@@ -294,7 +313,8 @@ class OnlineAllocator:
                 bf_metric=self.bf_metric)
         self.journal.append({
             "t": _journal.EPOCH_BEGIN, "engine": engine, "fp": fp,
-            "pal": per_agent_limit, "rng_state0": rng_state0})
+            "pal": per_agent_limit, "rng_state0": rng_state0,
+            "epoch": self.epoch_counter})
 
     def _journal_commit(self, grants: list) -> None:
         """Close the open epoch bracket: grant-sequence digest (recovery
@@ -359,6 +379,11 @@ class OnlineAllocator:
             "frameworks": fws,
             "fault": self.fault_stats.as_dict(),
             "health": self.device_health.state_dict(),
+            "epoch_counter": self.epoch_counter,
+            "grant_epochs": [[f, a, e]
+                             for (f, a), e in self._grant_epoch.items()],
+            "tenancy": (None if self.tenancy is None
+                        else self.tenancy.state_dict()),
         }
 
     def restore(self, payload: dict) -> None:
@@ -396,9 +421,22 @@ class OnlineAllocator:
         self.rng.bit_generator.state = payload["rng_state"]
         self.fault_stats.restore(payload["fault"])
         self.device_health.restore(payload["health"])
+        # pre-tenancy checkpoints carry none of these keys: default to the
+        # state a fresh pre-tenancy allocator would hold.
+        self.epoch_counter = int(payload.get("epoch_counter", 0))
+        self._grant_epoch = {(f, a): int(e)
+                             for f, a, e in payload.get("grant_epochs", ())}
+        ten = payload.get("tenancy")
+        if ten is not None:
+            if self.tenancy is None:
+                raise ValueError(
+                    "checkpoint carries tenancy control-plane state but "
+                    "this allocator was constructed without tenancy")
+            self.tenancy.restore_state(ten)
         self._inflight_epoch = None
         self._fair_cache = None
         self.last_revocations = []
+        self.last_admissions = []
 
     # -- dict-style views (read-only; canonical data is in self.state) -------
 
@@ -443,6 +481,8 @@ class OnlineAllocator:
         self.state.remove_agent(name)
         for fid, _n in lost:
             self._sync_demand(fid)
+        for key in [k for k in self._grant_epoch if k[1] == name]:
+            del self._grant_epoch[key]
         self._journal_rec({"t": _journal.AGENT_REMOVE, "name": name})
         return lost
 
@@ -478,6 +518,8 @@ class OnlineAllocator:
             if j is not None:
                 self.state.FREE[j] += s
         self.state.remove_framework(fid)
+        for key in [k for k in self._grant_epoch if k[0] == fid]:
+            del self._grant_epoch[key]
         self._journal_rec({"t": _journal.FW_DEREGISTER, "fid": fid})
 
     def release_executor(self, fid: str, agent: str) -> None:
@@ -548,6 +590,175 @@ class OnlineAllocator:
         self._journal_rec({"t": _journal.FORCE_PLACE, "fid": fid,
                            "agent": agent, "n": n_executors})
 
+    # -- multi-tenant control plane (repro.core.tenancy) ----------------------
+
+    def _require_tenancy(self) -> "_tenancy.ControlPlane":
+        if self.tenancy is None:
+            raise RuntimeError("no tenancy control plane attached: construct "
+                               "the allocator with tenancy=TenancyConfig(...)")
+        return self.tenancy
+
+    def submit_admission(self, fid: str, demand=None, wanted_tasks: int = 1,
+                         phi: float = 1.0, allowed_agents=None,
+                         tenant: Optional[str] = None,
+                         now: float = 0.0) -> None:
+        """Queue an arrival for admission instead of registering it.
+
+        The admission gate at the top of the next allocation epoch drains
+        the queue in dominant-share-over-queued-demand order (see the
+        :mod:`repro.core.tenancy` docstring) and registers the admitted
+        entries through the normal :meth:`register` path.  ``tenant``
+        defaults to the fid itself (every framework its own tenant);
+        ``now`` is the caller's clock (simulator virtual time) and feeds
+        the admission-latency metrics."""
+        cp = self._require_tenancy()
+        if fid in self.frameworks:
+            raise ValueError(f"{fid!r} is already registered")
+        if cp.has_queued(fid):
+            raise ValueError(f"{fid!r} is already queued for admission")
+        t = fid if tenant is None else tenant
+        entry = cp.enqueue(fid=fid, tenant=t, demand=demand,
+                           wanted=wanted_tasks, phi=phi,
+                           allowed=allowed_agents, t_enqueue=now)
+        self._journal_rec({
+            "t": _journal.ADMIT_ENQUEUE, "fid": fid, "tenant": t,
+            "demand": entry.demand, "wanted": entry.wanted,
+            "phi": entry.phi,
+            "allowed": None if entry.allowed is None else list(entry.allowed),
+            "tq": entry.t_enqueue, "seq": entry.seq})
+
+    def spend_queue_jump(self, fid: str) -> None:
+        """Spend the tenant's credits to jump ``fid`` ahead of every
+        non-jumped entry in the admission queue (ValueError when the
+        balance is short)."""
+        cp = self._require_tenancy()
+        entry = cp.find_queued(fid)
+        cp.spend(entry.tenant, cp.cfg.queue_jump_cost)
+        entry.jumped = True
+        cp.jumps_total += 1
+        self._journal_credit("spend-jump", fid=fid)
+
+    def spend_shield(self, tenant: str) -> None:
+        """Spend the tenant's credits to shield its revocable grants from
+        the preemption pass for ``shield_epochs`` allocation epochs."""
+        cp = self._require_tenancy()
+        cp.spend(tenant, cp.cfg.shield_cost)
+        cp.shield_until[tenant] = self.epoch_counter + cp.cfg.shield_epochs
+        cp.shields_total += 1
+        self._journal_credit("spend-shield", tenant=tenant)
+
+    def _journal_credit(self, op: str, **extra) -> None:
+        """Journal a credit-ledger mutation with ABSOLUTE post-op maps —
+        replay restores the maps verbatim, order-independent."""
+        if self.journal is None:
+            return
+        rec = {"t": _journal.CREDIT, "op": op}
+        rec.update(self.tenancy.credit_state())
+        rec.update(extra)
+        self.journal.append(rec)
+
+    def _tenant_shares(self) -> dict:
+        """tenant -> aggregate UNWEIGHTED dominant share of its registered
+        frameworks' holdings over pooled capacity (the floor/credit and
+        admission-ordering currency; phi stays an intra-allocation weight)."""
+        ctot, _level = self._fair_consts()
+        cp = self.tenancy
+        agg: dict = {}
+        for fid, fw in self.frameworks.items():
+            t = fid if cp is None else cp.tenant_of.get(fid, fid)
+            cur = agg.get(t)
+            agg[t] = fw.usage if cur is None else cur + fw.usage
+        if ctot is None:
+            return {t: 0.0 for t in agg}
+        denom = np.maximum(ctot[0], 1e-30)
+        return {t: float(np.max(u / denom)) for t, u in agg.items()}
+
+    def _admission_gate(self) -> None:
+        """Drain the admission queue (bounded by the per-epoch budget) in
+        demand-aware order, registering each admitted entry.  Runs BEFORE
+        the epoch tick, the preemption pass and the journal bracket, so
+        the records land outside the bracket (replayed eagerly) and the
+        admitted frameworks participate in this very epoch."""
+        cp = self.tenancy
+        if cp.last_gate_epoch > self.epoch_counter:
+            # this epoch's admissions were already applied — a recovery
+            # replayed the admit record (it lands OUTSIDE the epoch
+            # bracket) and is now re-running the dangling epoch itself
+            return
+        if not cp.queue:
+            return
+        ctot, _level = self._fair_consts()
+        order = cp.admission_order(self._tenant_shares(),
+                                   None if ctot is None else ctot[0])
+        budget = cp.cfg.max_admissions_per_epoch
+        if budget is not None:
+            order = order[:budget]
+        admitted = []
+        for entry in order:
+            cp.dequeue(entry.fid)
+            # suppress the separate fw-register record: the batch ADMIT
+            # record below subsumes registration (its replay re-registers
+            # from the queued entries), so journaling both would tear
+            jn, self.journal = self.journal, None
+            try:
+                self.register(entry.fid, demand=entry.demand,
+                              wanted_tasks=entry.wanted, phi=entry.phi,
+                              allowed_agents=entry.allowed)
+            finally:
+                self.journal = jn
+            cp.tenant_of[entry.fid] = entry.tenant
+            admitted.append(entry.fid)
+            self.last_admissions.append(
+                (entry.fid, entry.tenant, entry.t_enqueue))
+        if admitted:
+            # one atomic record for the whole gate run — a journal cut
+            # either sees every admission of this epoch or none, and the
+            # epoch watermark makes replay-then-re-run idempotent
+            cp.last_gate_epoch = self.epoch_counter + 1
+            self._journal_rec({"t": _journal.ADMIT, "fids": admitted,
+                               "epoch": cp.last_gate_epoch})
+
+    def _accrue_credits(self) -> None:
+        """Per-epoch credit accrual: every tenant whose aggregate share
+        sits under the equal split across active tenants earns
+        ``credit_accrual`` credits.  One journal record per epoch with
+        absolute balances (skipped when nothing accrued)."""
+        cp = self.tenancy
+        rate = cp.cfg.credit_accrual
+        if rate <= 0.0:
+            return
+        if cp.last_accrued_epoch >= self.epoch_counter:
+            # this epoch's accrual was already applied — a recovery
+            # replayed the accrue record (it lands OUTSIDE the epoch
+            # bracket) and is now re-running the epoch itself
+            return
+        shares = self._tenant_shares()
+        if not shares:
+            return
+        split = 1.0 / len(shares)
+        changed = False
+        for t in sorted(shares):
+            if shares[t] < split - cp.cfg.eps:
+                cp.accrue(t, rate)
+                changed = True
+        if changed:
+            cp.last_accrued_epoch = self.epoch_counter
+            self._journal_credit("accrue")
+
+    def _epoch_open(self) -> None:
+        """Shared prologue of EVERY allocation-epoch path (per-grant,
+        batched host, fused device, async begin): drain the admission
+        queue, tick the epoch counter (only for epochs with work — the
+        same condition that opens a journal bracket, so replay restores
+        the counter from epoch-begin records exactly), accrue credits.
+        Everything here precedes the preemption pass and the view freeze."""
+        if self.tenancy is not None:
+            self._admission_gate()
+        if self.frameworks and self.state.n_agents > 0:
+            self.epoch_counter += 1
+            if self.tenancy is not None:
+                self._accrue_credits()
+
     # -- scoring ------------------------------------------------------------
 
     def _sync_demand(self, fid: str) -> None:
@@ -604,10 +815,29 @@ class OnlineAllocator:
 
     def _grant_is_revocable(self, fw, usage_after: np.ndarray) -> bool:
         """Would this grant leave fw OVER threshold * its phi-weighted fair
-        share?  (criteria owns the share math — see fair_share_level.)"""
+        share?  (criteria owns the share math — see fair_share_level.)
+
+        With a tenancy control plane attached and a quota floor configured
+        for fw's tenant, the membership-relative rule is replaced by the
+        absolute floor rule: firm while the TENANT's aggregate unweighted
+        dominant share (this grant included) stays at or under the floor,
+        revocable above it — even when the tenant is alone on the cluster
+        (the lone-tenant gap; see repro.core.tenancy)."""
         ctot, level = self._fair_consts()
         if ctot is None or level is None:
             return False
+        cp = self.tenancy
+        if cp is not None:
+            tenant = cp.tenant_of.get(fw.fid, fw.fid)
+            floor = cp.cfg.floor_of(tenant)
+            if floor > 0.0:
+                agg = usage_after
+                for ofid, ofw in self.frameworks.items():
+                    if (ofid != fw.fid
+                            and cp.tenant_of.get(ofid, ofid) == tenant):
+                        agg = agg + ofw.usage
+                share = float(np.max(agg / np.maximum(ctot[0], 1e-30)))
+                return bool(share > floor + self.preemption.eps)
         share = criteria.usage_dominant_share(
             usage_after[None, :], ctot, np.asarray([fw.phi]))[0]
         return bool(share > self.preemption.threshold * level
@@ -632,6 +862,7 @@ class OnlineAllocator:
         if batched:
             return self.allocate_batched(per_agent_limit,
                                          use_kernel=use_kernel)
+        self._epoch_open()     # admissions + epoch tick + credit accrual
         self._preempt_pass()   # epoch-level pass precedes the grant loop
         # per-grant epochs are journal-bracketed too: even a zero-grant RRR
         # epoch draws permutations, so recovery needs the commit record's
@@ -909,9 +1140,11 @@ class OnlineAllocator:
         if self._inflight_epoch is not None:
             raise RuntimeError("an allocation epoch is already in flight; "
                                "commit_epoch() it before beginning another")
-        # the preemption pass mutates (revokes) BEFORE the view freeze, so
-        # the dispatched epoch scores the post-revocation state and the
-        # staleness guard below is armed after it.
+        # admission gate + epoch tick + credit accrual, then the preemption
+        # pass — both mutate (register / revoke) BEFORE the view freeze, so
+        # the dispatched epoch scores the post-admission post-revocation
+        # state and the staleness guard below is armed after them.
+        self._epoch_open()
         revs = self._preempt_pass()
         # the recovery anchor: every draw this epoch makes (RRR preperm
         # prefix, host per-round permutations, grow-and-replay top-ups)
@@ -1347,6 +1580,11 @@ class OnlineAllocator:
                      and self._grant_is_revocable(fw, fw.usage + bundle))
         if revocable:
             fw.revocable[agent] = fw.revocable.get(agent, 0) + n_exec
+        if self.preemption is not None:
+            # hysteresis freshness stamp: the pair's newest grant epoch
+            # (revocation pops LIFO, so pair-level freshness IS per-grant
+            # freshness — see PreemptionPolicy.hysteresis_epochs).
+            self._grant_epoch[(fid, agent)] = self.epoch_counter
         self.state.grant(fid, agent, bundle, n_exec,
                          revocable_units=n_exec if revocable else 0)
         fw.tasks.setdefault(agent, []).extend([d.copy()] * n_exec)

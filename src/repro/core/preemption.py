@@ -67,6 +67,17 @@ Per round the pass:
      their scores are the lowest) or the revocable pool / per-epoch budget
      is exhausted.
 
+Tenancy hooks (see :mod:`repro.core.tenancy` and ``docs/tenancy.md``):
+with a control plane attached the victim rule is floor-aware — a tenant
+carrying a quota floor is a candidate iff its AGGREGATE unweighted share
+exceeds the floor (at/under-floor tenants are never victims; above-floor
+holdings are revocable even for a lone tenant), and credit-shielded
+tenants are skipped for the shield window.  Revocation hysteresis
+(``hysteresis_epochs``, default 2) additionally protects any
+(framework, agent) pair granted within the last k allocation epochs, so
+a revoke -> regrant -> revoke oscillation across consecutive epochs is
+structurally impossible.
+
 Preemption is characterized-mode only: the oblivious allocator neither
 knows true demands (starvation is undetectable) nor grants task quanta
 (coarse offers hold slack, which deregistration — not revocation — frees).
@@ -104,12 +115,23 @@ class PreemptionPolicy:
     max_revocations_per_epoch
         Hard cap on revocations per pass (None = unlimited; the pass is
         bounded by the revocable pool regardless).
+    hysteresis_epochs
+        Revocation hysteresis (the ROADMAP follow-on from the PR-5
+        fragment-thrash scenario): the pass never revokes from a
+        (framework, agent) pair whose most recent grant was made within
+        the last ``k`` allocation epochs (``allocator.epoch_counter``
+        ticks once per epoch).  Because revocation pops the NEWEST bundle
+        (LIFO), protecting the pair while its newest grant is fresh is
+        exactly "never revoke a grant made within the last k epochs".
+        0 disables the filter (the pre-hysteresis pass semantics most
+        unit tests pin).
     eps
         Share-comparison tolerance (absorbs f64 rounding of usage sums).
     """
 
     threshold: float = 1.0
     max_revocations_per_epoch: Optional[int] = None
+    hysteresis_epochs: int = 2
     eps: float = 1e-9
 
 
@@ -131,6 +153,8 @@ def preempt_pass(al) -> list:
     ``al.revoke_executor`` only — the same O(R) incremental accounting
     every other mutation uses."""
     pol = al.preemption
+    cp = al.tenancy
+    k = pol.hysteresis_epochs
     revs: list = []
     budget = (pol.max_revocations_per_epoch
               if pol.max_revocations_per_epoch is not None else 1 << 30)
@@ -146,11 +170,45 @@ def preempt_pass(al) -> list:
         level = criteria.fair_share_level(view.phi)
         over = shares > pol.threshold * level + pol.eps
 
+        if cp is not None:
+            # quota floors override the membership-relative rule: a row
+            # whose tenant carries a floor is a victim candidate iff the
+            # TENANT's aggregate unweighted share exceeds the floor (and
+            # at/under-floor tenants are protected regardless of who else
+            # is registered — recomputed per round, so revocations stop AT
+            # the floor).  Shielded tenants are protected outright.
+            tshares = al._tenant_shares()
+            for i, f in enumerate(view.fids):
+                t = cp.tenant_of.get(f, f)
+                if cp.shield_active(t, al.epoch_counter):
+                    over[i] = False
+                    continue
+                floor = cp.cfg.floor_of(t)
+                if floor > 0.0:
+                    over[i] = tshares.get(t, 0.0) > floor + pol.eps
+
+        # revocation hysteresis: pairs whose NEWEST grant is younger than
+        # k epochs are untouchable this pass — masked out of the victim
+        # pool AND of the freeable `potential` below (counting them would
+        # declare agents helpful that the pass then cannot actually free).
+        Xr = view.Xr
+        if k > 0 and al._grant_epoch:
+            fidx = {f: i for i, f in enumerate(view.fids)}
+            aidx = {a: j for j, a in enumerate(view.agents)}
+            fresh = np.zeros((N, J), bool)
+            for (f, a), e in al._grant_epoch.items():
+                if al.epoch_counter - e < k:
+                    i, j = fidx.get(f), aidx.get(a)
+                    if i is not None and j is not None:
+                        fresh[i, j] = True
+            if fresh.any():
+                Xr = np.where(fresh, 0.0, Xr)
+
         # what COULD each agent free: its FREE vector plus every over-share
-        # victim's revocable bundles held there (characterized mode: one
+        # victim's revocable bundles there (characterized mode: one
         # bundle per revocable executor = the framework's demand row).
         potential = view.FREE + np.einsum(
-            "nj,nr->jr", np.where(over[:, None], view.Xr, 0.0), view.D)
+            "nj,nr->jr", np.where(over[:, None], Xr, 0.0), view.D)
 
         # one-more-task feasibility through the SAME shared formula the
         # grant loops use — against the live FREE (is i placeable now?)
@@ -182,7 +240,7 @@ def preempt_pass(al) -> list:
         if not starved:
             break
 
-        cand = over[:, None] & helpful[None, :] & (view.Xr > 0)
+        cand = over[:, None] & helpful[None, :] & (Xr > 0)
         if not cand.any():
             break                             # nothing (useful) to revoke
 

@@ -92,6 +92,15 @@ class SimConfig:
     preemption: bool = False             # revocable offers + the epoch-level
                                          # preemption pass (repro.core.preemption)
     preemption_threshold: float = 1.0    # over-share factor for revocability
+    preemption_hysteresis: int = 2       # never revoke a grant younger than
+                                         # this many epochs (PreemptionPolicy
+                                         # .hysteresis_epochs; 0 = off)
+    tenancy: object = None               # multi-tenant control plane: None |
+                                         # TenancyConfig (repro.core.tenancy).
+                                         # Arrivals then route through the
+                                         # admission queue on simulator
+                                         # virtual time; a job's tenant is
+                                         # spec.tenant or its workload group.
     epoch_cache: object = False          # precomputed-epoch cache: False |
                                          # True | byte budget | EpochCache
                                          # (repro.core.epoch_cache; instances
@@ -212,11 +221,14 @@ class SparkMesosSim:
         if cfg.preemption:
             from repro.core.preemption import PreemptionPolicy
 
-            preempt = PreemptionPolicy(threshold=cfg.preemption_threshold)
+            preempt = PreemptionPolicy(
+                threshold=cfg.preemption_threshold,
+                hysteresis_epochs=cfg.preemption_hysteresis)
         self.alloc = OnlineAllocator(
             n_resources=R, criterion=cfg.criterion, server_policy=cfg.server_policy,
             mode=cfg.mode, bf_metric=cfg.bf_metric, seed=cfg.seed,
             preemption=preempt, epoch_cache=cfg.epoch_cache,
+            tenancy=cfg.tenancy,
         )
         self.alloc.framework_demand_oracle = self._demand_oracle
         self.jobs: dict[str, _Job] = {}
@@ -288,8 +300,19 @@ class SparkMesosSim:
                    lane=arrival.lane)
         job.submit_time = self.now
         self.jobs[arrival.jid] = job
-        self.alloc.register(arrival.jid, demand=job.spec.demand,
-                            wanted_tasks=job.wanted())
+        if self.alloc.tenancy is not None:
+            # control plane on: the arrival queues for admission (tenant =
+            # spec.tenant, defaulting to the workload group) and the gate
+            # registers it at the head of a later epoch — on simulator
+            # virtual time, so admission latency is a measured quantity.
+            self.alloc.submit_admission(
+                arrival.jid, demand=job.spec.demand,
+                wanted_tasks=job.wanted(),
+                tenant=getattr(job.spec, "tenant", None) or job.spec.group,
+                now=self.now)
+        else:
+            self.alloc.register(arrival.jid, demand=job.spec.demand,
+                                wanted_tasks=job.wanted())
         for h in self.hooks:
             h.on_submit(self.now, arrival.jid, arrival.spec)
 
@@ -397,6 +420,16 @@ class SparkMesosSim:
         self._apply_grants(grants)
 
     def _apply_grants(self, grants):
+        # admissions of this epoch (the gate ran inside the allocator):
+        # surface them to the hooks at the epoch's timestamp — common to
+        # the sync path and the async commit point, so both see identical
+        # admission times.
+        if self.alloc.last_admissions:
+            for fid, tenant, t_enq in self.alloc.last_admissions:
+                for h in self.hooks:
+                    h.on_admission(self.now, fid, tenant,
+                                   max(0.0, self.now - t_enq))
+            self.alloc.last_admissions.clear()
         for g in grants:
             job = self.jobs[g.fid]
             for _ in range(g.n_executors):

@@ -48,6 +48,8 @@ class JobSpec:
     mean_task_s: float = 8.0
     max_executors: int = 12
     size_jitter: float = 0.5  # n_tasks ~ U[(1-j)*n, (1+j)*n] — staggers churn
+    tenant: Optional[str] = None  # multi-tenant control plane: the tenant
+                                  # this job bills to (None = its group)
 
 
 @dataclasses.dataclass(frozen=True)

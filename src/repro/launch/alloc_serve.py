@@ -55,6 +55,8 @@ class AllocRequest(NamedTuple):
     deadline: Optional[float] = None   # absolute service-clock deadline;
                                        # expired requests are dropped (and
                                        # counted) instead of served late
+    tenant: Optional[str] = None       # tenancy lane (defaults to fid when
+                                       # the control plane is attached)
 
 
 class AllocatorService:
@@ -84,11 +86,15 @@ class AllocatorService:
                  backoff_s: float = 0.02, clock=time.monotonic,
                  fault_injector=None, recovery=None,
                  state_dir: Optional[str] = None, snapshot_every: int = 16,
-                 fsync_every: int = 8):
+                 fsync_every: int = 8, preemption=None, tenancy=None):
+        # tenancy/preemption ride into the allocator BEFORE recovery runs:
+        # journal replay of admit-enqueue/admit/credit records requires the
+        # control plane to already be attached (journal.py raises otherwise).
         self.alloc = OnlineAllocator(
             n_resources, criterion=criterion, server_policy=server_policy,
             seed=seed, epoch_cache=epoch_cache,
-            fault_injector=fault_injector, recovery=recovery)
+            fault_injector=fault_injector, recovery=recovery,
+            preemption=preemption, tenancy=tenancy)
         # durability (docs/robustness.md): recover FIRST (snapshot + journal
         # replay + warm cache), then attach the live journal, and only seed
         # the agent roster on a genuinely fresh state dir — a recovered one
@@ -122,6 +128,7 @@ class AllocatorService:
         self.epochs = 0
         self.rejected_backpressure = 0
         self.rejected_deadline = 0
+        self.coalesced_admissions = 0
         self.epoch_retries = 0
         self.epoch_failures = 0
         self._queue: list[AllocRequest] = []
@@ -167,9 +174,22 @@ class AllocatorService:
         for req in live:
             fw = self.alloc.frameworks.get(req.fid)
             if fw is None:
-                self.alloc.register(req.fid, demand=req.demand,
-                                    wanted_tasks=req.n_executors,
-                                    phi=req.phi)
+                if self.alloc.tenancy is not None:
+                    # per-tenant admission lane: the arrival queues in the
+                    # control plane and the admission gate at the top of the
+                    # next epoch registers it in demand-aware order.  A fid
+                    # already queued coalesces (counted, not re-enqueued).
+                    if self.alloc.tenancy.has_queued(req.fid):
+                        self.coalesced_admissions += 1
+                    else:
+                        self.alloc.submit_admission(
+                            req.fid, demand=req.demand,
+                            wanted_tasks=req.n_executors, phi=req.phi,
+                            tenant=req.tenant, now=now)
+                else:
+                    self.alloc.register(req.fid, demand=req.demand,
+                                        wanted_tasks=req.n_executors,
+                                        phi=req.phi)
             else:
                 self.alloc.set_wanted(
                     req.fid, fw.wanted_tasks + req.n_executors)
@@ -230,9 +250,12 @@ class AllocatorService:
             "rejected_deadline": self.rejected_deadline,
             "epoch_retries": self.epoch_retries,
             "epoch_failures": self.epoch_failures,
+            "coalesced_admissions": self.coalesced_admissions,
             "journal_lag_fsync": 0,
             "journal_lag_snapshot": 0,
         }
+        if self.alloc.tenancy is not None:
+            out["admissions"] = self.alloc.tenancy.counters()
         if self.alloc.journal is not None:
             jc = self.alloc.journal.counters()
             out["journal"] = jc
@@ -244,7 +267,7 @@ class AllocatorService:
         """Liveness/degradation endpoint: ``status`` is ``"degraded"``
         while the device path is quarantined (serving continues on the
         host engine), ``"ok"`` otherwise."""
-        return {
+        out = {
             "status": ("degraded" if self.alloc.device_health.quarantined
                        else "ok"),
             "queue_depth": len(self._queue),
@@ -255,6 +278,9 @@ class AllocatorService:
             "faults": self.alloc.fault_counters(),
             "counters": self.counters(),
         }
+        if self.alloc.tenancy is not None:
+            out["admissions"] = self.alloc.tenancy.counters()
+        return out
 
     def stats(self) -> dict:
         cache = self.alloc.epoch_cache
@@ -446,6 +472,102 @@ def kill_restart_smoke(state_dir: str, out_path: Optional[str] = None, *,
     return stats
 
 
+def multi_tenant_smoke(out_path: Optional[str] = None, *,
+                       n_tenants: int = 3, floor: float = 0.3,
+                       n_agents: int = 8, rounds: int = 24, seed: int = 0,
+                       criterion: str = "drf",
+                       server_policy: str = "rrr") -> dict:
+    """Multi-tenant serve smoke (CI tenancy job): ``n_tenants`` admission
+    lanes with tenant ``t0`` floor-protected, preemption on, and a bounded
+    admission gate (2/epoch against 3 arrivals/round) so queue pressure —
+    and therefore the demand-aware ordering and credit queue-jumps — is
+    actually exercised.  Asserts the PR-8 auditor is green on the final
+    ledger, admissions flowed, at least one credit jump fired, and the
+    per-tenant ledger conserves (``accrued - spent == balance``); writes
+    the admission-stats artifact the CI job uploads."""
+    from repro.core.preemption import PreemptionPolicy
+    from repro.core.tenancy import TenancyConfig
+
+    agents = [(f"a{j}", _AGENT_TYPES[j % len(_AGENT_TYPES)])
+              for j in range(n_agents)]
+    tcfg = TenancyConfig(floors=(("t0", float(floor)),),
+                         queue_jump_cost=2.0, shield_cost=4.0,
+                         max_admissions_per_epoch=2)
+    service = AllocatorService(
+        2, agents, criterion=criterion, server_policy=server_policy,
+        seed=seed, preemption=PreemptionPolicy(), tenancy=tcfg)
+    cp = service.alloc.tenancy
+    rng = np.random.default_rng(seed)
+    admission_wait = _metrics.LatencyStats()
+    n_fids = 0
+    shielded = False
+    for r in range(rounds):
+        for t in range(n_tenants):
+            d = tuple(0.25 * int(rng.integers(1, 6)) for _ in range(2))
+            service.submit(AllocRequest(
+                fid=f"t{t}-fw{n_fids}", demand=d,
+                n_executors=int(rng.integers(1, 4)), tenant=f"t{t}"))
+            n_fids += 1
+        service.drain_epoch()
+        for _fid, _tenant, t_enq in service.alloc.last_admissions:
+            admission_wait.record(max(0.0, service.clock() - t_enq))
+        service.alloc.last_admissions.clear()
+        # spend accrued credits as soon as a queued lane can afford a
+        # jump (ahead of every non-jumped entry) / the floor tenant can
+        # afford a revocation shield — exercises both spend paths.
+        for e in cp.queue:
+            if not e.jumped and cp.balance(e.tenant) >= tcfg.queue_jump_cost:
+                service.alloc.spend_queue_jump(e.fid)
+                break
+        if not shielded and cp.balance("t0") >= tcfg.shield_cost:
+            service.alloc.spend_shield("t0")
+            shielded = True
+        # churn: retire the two oldest frameworks every third round so
+        # capacity returns and later admissions land on a warm cluster
+        if r % 3 == 2:
+            for fid in list(service.alloc.frameworks)[:2]:
+                service.complete(fid)
+    errs = _invariants.check(service.alloc)
+    assert errs == [], f"tenancy smoke: auditor violations: {errs}"
+    c = cp.counters()
+    assert c["admission_admitted_total"] > 0, "no admissions flowed"
+    assert c["admission_enqueued_total"] == (
+        c["admission_admitted_total"] + c["admission_queued"]), \
+        f"admission counters do not balance: {c}"
+    assert c["credit_jumps"] >= 1, f"credit queue-jump never fired: {c}"
+    for t in sorted(set(cp.accrued) | set(cp.spent) | set(cp.credits)):
+        lhs = cp.accrued.get(t, 0.0) - cp.spent.get(t, 0.0)
+        assert abs(lhs - cp.balance(t)) < 1e-9, \
+            f"tenant {t} ledger drifted: {lhs} != {cp.balance(t)}"
+    stats = {
+        "config": {"n_tenants": n_tenants, "floor": floor,
+                   "floor_tenant": "t0", "n_agents": n_agents,
+                   "rounds": rounds, "seed": seed, "criterion": criterion,
+                   "server_policy": server_policy},
+        "admissions": c,
+        "admission_wait": admission_wait.summary(),
+        "credits": cp.credit_state(),
+        "tenant_shares": {t: round(v, 6) for t, v in
+                          sorted(service.alloc._tenant_shares().items())},
+        "epochs": service.epochs,
+        "decisions": service.decisions,
+        "health": service.health(),
+        "ledger_invariants": "green",
+    }
+    print(f"tenancy smoke OK: admitted "
+          f"{c['admission_admitted_total']}/{c['admission_enqueued_total']} "
+          f"(queued {c['admission_queued']}), jumps {c['credit_jumps']}, "
+          f"shields {c['credit_shields']}, decisions {service.decisions}")
+    if out_path:
+        import pathlib
+
+        path = pathlib.Path(out_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(stats, indent=2))
+        print(f"wrote {path}")
+    return stats
+
+
 def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--agents", type=int, default=64)
@@ -466,6 +588,14 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                          "serving stays available (host fallback + "
                          "quarantine reported by the health endpoint)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="with --smoke: run the multi-tenant admission "
+                         "smoke with this many tenant lanes (t0 "
+                         "floor-protected, preemption on) and write the "
+                         "admission-stats artifact to --out")
+    ap.add_argument("--floor", type=float, default=0.3,
+                    help="quota floor (fraction of pooled capacity) for "
+                         "tenant t0 in the multi-tenant smoke")
     ap.add_argument("--out", default=None, help="write stats JSON here")
     ap.add_argument("--state-dir", default=None,
                     help="durable state directory (journal + snapshots + "
@@ -484,6 +614,11 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     if args.kill_restart_smoke:
         return kill_restart_smoke(args.state_dir or "serve-state",
                                   args.out, seed=args.seed)
+    if args.smoke and args.tenants > 0:
+        return multi_tenant_smoke(args.out, n_tenants=args.tenants,
+                                  floor=args.floor, seed=args.seed,
+                                  criterion=args.criterion,
+                                  server_policy=args.policy)
     if args.smoke:
         args.agents, args.frameworks = min(args.agents, 64), 40
         args.profiles, args.rounds = 4, 32

@@ -327,7 +327,8 @@ def test_preemption_pass_runs_live_on_hits():
     cache AND still emits the same revocations."""
     def starve(cache):
         al = OnlineAllocator(2, criterion="drf", server_policy="pooled",
-                             seed=0, preemption=PreemptionPolicy(),
+                             seed=0,
+                             preemption=PreemptionPolicy(hysteresis_epochs=0),
                              epoch_cache=cache)
         al.add_agent("a0", [8.0, 8.0])
         al.register("f0", demand=(2.0, 2.0), wanted_tasks=1)

@@ -368,6 +368,106 @@ def test_kill_point_sweep_every_record_boundary(tmp_path, policy):
         invariants.assert_recovery_parity(ref_al, rec_al)
 
 
+def _ten_alloc(policy, seed=0):
+    from repro.core.preemption import PreemptionPolicy
+    from repro.core.tenancy import TenancyConfig
+
+    return build_alloc(policy, seed=seed, preemption=PreemptionPolicy(),
+                       tenancy=TenancyConfig(floors=(("a", 0.25),),
+                                             max_admissions_per_epoch=2,
+                                             queue_jump_cost=1.0,
+                                             shield_cost=1.0,
+                                             shield_epochs=2))
+
+
+def _ten_pre_ops(al, e):
+    """Control-plane churn before epoch ``e`` — convergent like _pre_ops:
+    arrivals submit-if-absent, spends are guarded by the replay-restored
+    jump/shield counters, so a partial replay plus a re-run reaches the
+    uninterrupted run's exact control-plane state."""
+    cp = al.tenancy
+    if e == 0:
+        for j in range(4):
+            if f"a{j}" not in al.state.agent2slot:
+                al.add_agent(f"a{j}", (8.0, 16.0))
+        for i in range(5):
+            fid = f"fw{i}"
+            if fid not in al.frameworks and not cp.has_queued(fid):
+                al.submit_admission(fid, demand=(1.0 + 0.5 * (i % 3), 2.0),
+                                    wanted_tasks=4,
+                                    tenant="a" if i % 2 else "b",
+                                    now=float(i))
+    if e == 1:
+        for i in range(5, 8):
+            fid = f"fw{i}"
+            if fid not in al.frameworks and not cp.has_queued(fid):
+                al.submit_admission(fid, demand=(0.5, 1.0), wanted_tasks=3,
+                                    tenant="c", now=float(i))
+    if e == 2:
+        # spend the credits epochs 0-1 accrued: one queue jump, one shield
+        if cp.jumps_total == 0:
+            for entry in cp.queue:
+                if cp.balance(entry.tenant) >= 1.0:
+                    al.spend_queue_jump(entry.fid)
+                    break
+        if cp.shields_total == 0 and cp.balance("a") >= 1.0:
+            al.spend_shield("a")
+    if e == 3:
+        if "fw0" in al.frameworks:
+            al.set_wanted("fw0", 6)
+
+
+def _ten_run_script(al, start=0, end=N_EPOCHS):
+    traces = []
+    for e in range(start, end):
+        _ten_pre_ops(al, e)
+        grants = al.allocate(per_agent_limit=2)
+        traces.append([(g.fid, g.agent, int(g.n_executors)) for g in grants])
+    return traces
+
+
+@pytest.mark.parametrize("policy", ["pooled", "rrr"])
+def test_kill_point_sweep_tenancy_records(tmp_path, policy):
+    """The kill-point property over the control-plane record vocabulary:
+    a tenancy workload whose journal carries admit-enqueue / admit /
+    credit records (accrue, spend-jump AND spend-shield) recovers at
+    EVERY record boundary auditor-green, resumes to the reference traces,
+    and lands with queue contents and credit balances bit-identical
+    (``ControlPlane.state_dict`` equality + full recovery parity)."""
+    src = str(tmp_path / "full")
+    os.makedirs(src)
+    ref_al = _ten_alloc(policy)
+    ref_al.journal = J.Journal(os.path.join(src, J.JOURNAL_FILE),
+                               fsync_every=4)
+    ref_traces = _ten_run_script(ref_al)
+    ref_al.journal.close()
+    ref_al.journal = None
+    jpath = os.path.join(src, J.JOURNAL_FILE)
+    payloads, offsets, good_end, _ = J.scan_journal(jpath)
+    recs = [pickle.loads(p) for p in payloads]
+    kinds = {r["t"] for r in recs}
+    assert {J.ADMIT_ENQUEUE, J.ADMIT, J.CREDIT} <= kinds, \
+        f"workload never journaled the tenancy records: {kinds}"
+    ops = {r["op"] for r in recs if r["t"] == J.CREDIT}
+    assert {"accrue", "spend-jump", "spend-shield"} <= ops, ops
+    cuts = offsets + [good_end]
+    for i, cut in enumerate(cuts):
+        d = str(tmp_path / f"cut{i}")
+        os.makedirs(d)
+        raw = open(jpath, "rb").read()[:cut]
+        open(os.path.join(d, J.JOURNAL_FILE), "wb").write(raw)
+        rec_al = _ten_alloc(policy)
+        J.recover(rec_al, d)
+        assert invariants.check(rec_al) == [], f"auditor red at cut {i}"
+        committed = sum(1 for r in recs[:i] if r["t"] == J.EPOCH_COMMIT)
+        resumed = _ten_run_script(rec_al, start=committed)
+        assert resumed == ref_traces[committed:], \
+            f"resumed trace diverged after cut at record {i}"
+        assert rec_al.tenancy.state_dict() == ref_al.tenancy.state_dict(), \
+            f"control-plane state diverged after cut at record {i}"
+        invariants.assert_recovery_parity(ref_al, rec_al)
+
+
 def test_torn_final_record_recovery(tmp_path):
     """A SIGKILL mid-append leaves a partial final frame: recovery
     truncates it and lands on the last whole record's state."""

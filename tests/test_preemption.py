@@ -39,7 +39,12 @@ from repro.core.simulator import (
 CRITERIA = ("drf", "tsf", "psdsf", "rpsdsf")
 
 
-def _alloc(criterion="drf", policy="pooled", seed=0, preemption=PreemptionPolicy(),
+# The classification/pass-mechanics tests below pin the PRE-hysteresis pass
+# semantics (victims revocable the epoch after the grant), so they disable
+# the freshness filter explicitly; hysteresis itself is regression-tested in
+# test_hysteresis_* below and in tests/test_tenancy.py.
+def _alloc(criterion="drf", policy="pooled", seed=0,
+           preemption=PreemptionPolicy(hysteresis_epochs=0),
            agents=((4.0, 4.0), (4.0, 4.0))):
     al = OnlineAllocator(2, criterion=criterion, server_policy=policy,
                          seed=seed, preemption=preemption)
@@ -136,6 +141,7 @@ def _starvation_setup(criterion="drf", policy="pooled", seed=0, **pol_kw):
     """f1 grabs beyond its share while f0 wants little; then f0's demand
     grows back against a full cluster -> f0 is starved.  One agent, so the
     victim's revocable executors concentrate where they can help."""
+    pol_kw.setdefault("hysteresis_epochs", 0)
     al = _alloc(criterion=criterion, policy=policy, seed=seed,
                 agents=((8.0, 8.0),),
                 preemption=PreemptionPolicy(**pol_kw))
@@ -235,7 +241,8 @@ def _drive_epochs(criterion, policy, final_path, seed=3):
     and regrants — runs on the path under test.  RRR parity is therefore
     per-epoch, matching the engine_jax cross-epoch rng caveat."""
     al = OnlineAllocator(2, criterion=criterion, server_policy=policy,
-                         seed=seed, preemption=PreemptionPolicy())
+                         seed=seed,
+                         preemption=PreemptionPolicy(hysteresis_epochs=0))
     for j, cap in enumerate([(4.0, 14.0), (8.0, 8.0), (6.0, 11.0)]):
         al.add_agent(f"a{j}", cap)
     al.register("f0", demand=(2.0, 2.0), wanted_tasks=1, phi=2.0)
@@ -338,6 +345,82 @@ def test_never_triggering_threshold_is_bitwise_noop():
         return out
 
     assert run(None) == run(PreemptionPolicy(threshold=1e18))
+
+
+# ---------------------------------------------------------------------------
+# revocation hysteresis (ROADMAP follow-on; default hysteresis_epochs=2)
+# ---------------------------------------------------------------------------
+
+def test_hysteresis_protects_fresh_grants():
+    """The default policy never revokes a grant made within the last 2
+    epochs: the starved epoch right after the land-grab revokes nothing."""
+    al = _starvation_setup(criterion="drf", hysteresis_epochs=2)
+    al.allocate(batched=True)
+    assert al.last_revocations == []
+
+
+def test_hysteresis_expires_after_k_epochs():
+    """Once the victim's grants age past k epochs the same starvation
+    triggers the usual revocations."""
+    al = _starvation_setup(criterion="drf", hysteresis_epochs=2)
+    al.allocate(batched=True)           # epoch 2: grants fresh -> protected
+    assert al.last_revocations == []
+    al.allocate(batched=True)           # epoch 3: age 2 >= k -> revocable
+    assert al.last_revocations
+    assert all(r.fid == "f1" for r in al.last_revocations)
+
+
+def test_hysteresis_zero_is_bitwise_noop():
+    """hysteresis_epochs=0 reproduces the pre-hysteresis pass exactly."""
+    def run(**kw):
+        al = _starvation_setup(criterion="rpsdsf", policy="pooled", **kw)
+        gs = al.allocate(batched=True)
+        return ([(g.fid, g.agent, g.revocable) for g in gs],
+                [(r.fid, r.agent) for r in al.last_revocations])
+
+    assert run(hysteresis_epochs=0) == run(hysteresis_epochs=0)
+    assert run(hysteresis_epochs=0)[1]     # the scenario does revoke
+
+
+def test_hysteresis_stops_fragment_thrash_oscillation():
+    """The PR-5 fragment-thrash scenario, epoch-looped: without hysteresis
+    a revoke -> regrant -> revoke cycle can oscillate the same executors
+    across consecutive epochs; with the default policy no (framework,
+    agent) pair is ever revoked within 2 epochs of its latest grant, so
+    back-to-back revocations of freshly regranted executors cannot occur
+    (and the allocation still converges to the starved framework's fill)."""
+    def drive(k):
+        al = _alloc(agents=((8.0, 8.0),),
+                    preemption=PreemptionPolicy(hysteresis_epochs=k))
+        al.register("f0", demand=(2.0, 2.0), wanted_tasks=1)
+        al.register("f1", demand=(1.0, 1.0), wanted_tasks=100)
+        al.allocate(batched=True)
+        # oscillation driver: f0 bursts (starving against the full
+        # cluster), finishes and releases, f1 re-grabs the space as fresh
+        # revocable grants, f0 bursts again ...
+        events = []
+        for epoch in range(6):
+            if epoch % 2 == 0:
+                al.set_wanted("f0", 3)
+            else:
+                fw = al.frameworks["f0"]
+                while fw.n_tasks > 1:
+                    agent = next(a for a, t in fw.tasks.items() if t)
+                    al.release_executor("f0", agent)
+                al.set_wanted("f0", 1)
+            al.allocate(batched=True)
+            events.append([(r.fid, r.agent) for r in al.last_revocations])
+        return events
+
+    churn0 = drive(0)
+    churn2 = drive(2)
+    # un-hysteresis'd: revocations recur across the alternating epochs
+    assert sum(1 for e in churn0 if e) >= 2
+    # hysteresis: once a pair is (re)granted, 2 epochs must pass before it
+    # can be revoked again -> no back-to-back revocation epochs
+    for a, b in zip(churn2, churn2[1:]):
+        assert not (a and b), (churn2, "back-to-back revocation epochs")
+    assert sum(1 for e in churn2 if e) <= sum(1 for e in churn0 if e)
 
 
 # ---------------------------------------------------------------------------
